@@ -1,0 +1,45 @@
+"""Shared benchmark utilities: CSV emission, timing, default budgets."""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, Iterable, List
+
+RESULTS_DIR = os.environ.get("BENCH_RESULTS", "results/bench")
+
+# "quick" mode keeps the full sweep per figure but with smaller search
+# budgets so `python -m benchmarks.run` completes on one CPU core.
+QUICK = os.environ.get("BENCH_QUICK", "1") == "1"
+
+
+def emit(name: str, rows: List[Dict]) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    if not rows:
+        print(f"[{name}] no rows")
+        return
+    cols = list(rows[0].keys())
+    path = os.path.join(RESULTS_DIR, name + ".csv")
+    with open(path, "w") as f:
+        f.write(",".join(cols) + "\n")
+        for r in rows:
+            f.write(",".join(str(r.get(c, "")) for c in cols) + "\n")
+    print(f"[{name}] wrote {len(rows)} rows -> {path}")
+    header = " | ".join(f"{c:>14s}" for c in cols)
+    print(header)
+    for r in rows:
+        print(" | ".join(f"{_fmt(r.get(c, '')):>14s}" for c in cols))
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.3f}"
+    return str(v)
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.monotonic()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.monotonic() - self.t0

@@ -1,0 +1,61 @@
+"""Run every benchmark (one per paper figure) + the roofline table.
+
+    PYTHONPATH=src python -m benchmarks.run            # quick budgets
+    BENCH_QUICK=0 PYTHONPATH=src python -m benchmarks.run   # full sweep
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    sys.path.insert(0, "src")
+    from benchmarks import (fig3_e2e, fig4_loadbalance,
+                            fig5_search_efficiency, fig6_small_scale_ilp,
+                            fig7_costmodel_validation,
+                            fig8_training_quality, fig10_heterogeneity)
+    benches = [
+        ("fig3_e2e (Figure 3: end-to-end throughput)", fig3_e2e.run),
+        ("fig4_loadbalance (Figure 4: LB ablation)", fig4_loadbalance.run),
+        ("fig5_search_efficiency (Figure 5)", fig5_search_efficiency.run),
+        ("fig6_small_scale_ilp (Figure 6)", fig6_small_scale_ilp.run),
+        ("fig7_costmodel_validation (Figure 7)",
+         fig7_costmodel_validation.run),
+        ("fig8_training_quality (Figures 8/9: sync vs async quality)",
+         fig8_training_quality.run),
+        ("fig10_heterogeneity (Figure 10)", fig10_heterogeneity.run),
+    ]
+    failures = []
+    for name, fn in benches:
+        print(f"\n==== {name} ====", flush=True)
+        t0 = time.monotonic()
+        try:
+            fn()
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+        print(f"({time.monotonic() - t0:.0f}s)", flush=True)
+
+    # roofline table from whatever dry-run results exist so far
+    print("\n==== roofline (from results/dryrun) ====", flush=True)
+    try:
+        from repro.launch.roofline import table
+        if os.path.isdir("results/dryrun"):
+            print(table("results/dryrun"))
+        else:
+            print("no dry-run results yet; run repro.launch.dryrun_all")
+    except Exception:
+        traceback.print_exc()
+        failures.append("roofline")
+
+    if failures:
+        print(f"\nFAILED: {failures}")
+        raise SystemExit(1)
+    print("\nall benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

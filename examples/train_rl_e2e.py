@@ -1,0 +1,94 @@
+"""End-to-end RL training driver: GRPO (or PPO) on the verifiable
+integer-addition task, with the HetRL scheduler choosing the execution
+plan for the device pool first (annotative on a single host).
+
+    PYTHONPATH=src python examples/train_rl_e2e.py \
+        --iters 200 --batch 16 --d-model 192 --layers 4
+
+Reward (digit-level correctness) and greedy exact-match accuracy climb
+within a few dozen iterations; checkpoints land in results/rl_ckpt.
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.checkpoint import io as ckpt
+from repro.core import enumerate as enum_mod, topology, workflow
+from repro.core.costmodel import CostModel
+from repro.data.synthetic import AdditionTask, PromptDataset, VOCAB_SIZE
+from repro.models.config import ModelConfig
+from repro.rl.trainer import RLConfig, RLTrainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--algorithm", default="grpo", choices=["grpo", "ppo"])
+    ap.add_argument("--iters", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--rollouts", type=int, default=8)
+    ap.add_argument("--d-model", type=int, default=192)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--max-operand", type=int, default=9)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = ModelConfig(
+        name="rl-actor", n_layers=args.layers, d_model=args.d_model,
+        n_heads=max(args.d_model // 48, 2), n_kv_heads=2, head_dim=48,
+        d_ff=args.d_model * 3, vocab_size=VOCAB_SIZE, dtype="float32")
+    print(f"actor: {cfg.param_count():,} params")
+
+    # --- scheduling phase: what would this workflow need on a cluster? ---
+    topo = topology.build_testbed("single_region",
+                                  counts={"A100": 4, "L4": 4})
+    spec = workflow.LLMSpec.from_model_config(cfg)
+    wf = workflow.make_workflow(args.algorithm, spec,
+                                global_batch=args.batch,
+                                n_rollouts=args.rollouts, seq_in=16,
+                                seq_out=8)
+    grouping = enum_mod.priority_groupings(wf)[0]
+    plan = enum_mod.build_plan(topo, wf, grouping, [topo.n],
+                               list(range(topo.n)))
+    print(f"scheduler: colocated plan estimated at "
+          f"{CostModel(topo, wf).cost(plan) * 1e3:.1f}ms/iter on the "
+          f"8-GPU reference pool (executing locally on "
+          f"{jax.device_count()} host device(s))")
+
+    # --- RL training ---
+    task = AdditionTask(max_operand=args.max_operand)
+    rl = RLConfig(algorithm=args.algorithm, n_rollouts=args.rollouts,
+                  max_new_tokens=task.max_answer_len, lr=args.lr,
+                  kl_beta=0.002)
+    trainer = RLTrainer(cfg, rl, task, jax.random.PRNGKey(0), plan=plan)
+    ds = iter(PromptDataset(task, batch=args.batch, seed=1))
+    eval_rng = np.random.default_rng(7)
+    eval_prompts, eval_answers = task.sample_batch(eval_rng, 64)
+
+    key = jax.random.PRNGKey(42)
+    t0 = time.time()
+    for it in range(args.iters):
+        prompts, answers = next(ds)
+        key, k = jax.random.split(key)
+        m = trainer.iteration(prompts, answers, k)
+        if it % 10 == 0 or it == args.iters - 1:
+            acc = trainer.evaluate(eval_prompts, eval_answers,
+                                   jax.random.PRNGKey(1))
+            print(f"iter {it:4d} reward={m['reward_mean']:.3f} "
+                  f"kl={m['kl']:.3f} acc={acc:.2f} "
+                  f"sync={m['sync_gb'] * 1e3:.1f}MB "
+                  f"({time.time() - t0:.0f}s)")
+        if args.ckpt_every and it and it % args.ckpt_every == 0:
+            n = ckpt.save("results/rl_ckpt/actor.msgpack", trainer.actor)
+            print(f"  checkpointed actor ({n / 1e6:.1f} MB)")
+    acc = trainer.evaluate(eval_prompts, eval_answers, jax.random.PRNGKey(1))
+    print(f"final greedy exact-match accuracy: {acc:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Checkpointing: msgpack-serialized pytrees (no orbax offline).
+
+Supports periodic saves during RL training — the paper leans on this for
+online redeployment (§6: reschedule at checkpoint boundaries)."""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _pack_leaf(x):
+    x = np.asarray(x)
+    return {b"dtype": str(x.dtype).encode(),
+            b"shape": list(x.shape),
+            b"data": x.tobytes()}
+
+
+def _unpack_leaf(d):
+    arr = np.frombuffer(d[b"data"], dtype=np.dtype(d[b"dtype"].decode()))
+    return jnp.asarray(arr.reshape(d[b"shape"]))
+
+
+def save(path: str, tree: Any) -> int:
+    """Returns bytes written."""
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    payload = {
+        b"treedef": str(treedef).encode(),
+        b"leaves": [_pack_leaf(x) for x in flat],
+    }
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    blob = msgpack.packb(payload)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(blob)
+    os.replace(tmp, path)
+    return len(blob)
+
+
+def restore(path: str, like: Any) -> Any:
+    """Restore into the structure of `like` (treedef source of truth)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read())
+    leaves = [_unpack_leaf(d) for d in payload[b"leaves"]]
+    flat, treedef = jax.tree_util.tree_flatten(like)
+    assert len(flat) == len(leaves), \
+        f"checkpoint has {len(leaves)} leaves, model has {len(flat)}"
+    restored = [l.astype(x.dtype).reshape(x.shape)
+                for l, x in zip(leaves, flat)]
+    return jax.tree_util.tree_unflatten(treedef, restored)

@@ -1,0 +1,3 @@
+"""Architecture configs (--arch <id>) and assigned input shapes."""
+from repro.configs.archs import ARCHS, SMOKE, get  # noqa: F401
+from repro.configs.shapes import SHAPES, input_specs, skip_reason  # noqa: F401

@@ -1,0 +1,88 @@
+"""Assigned input shapes and ShapeDtypeStruct input specs for the dry-run.
+
+Shapes (assigned):
+    train_4k     seq_len=4096    global_batch=256   (training)
+    prefill_32k  seq_len=32768   global_batch=32    (inference-prefill)
+    decode_32k   seq_len=32768   global_batch=128   (inference-decode)
+    long_500k    seq_len=524288  global_batch=1     (long-context-decode)
+
+Decode shapes lower ``serve_step`` (one new token + KV cache of seq_len).
+``long_500k`` is run only for architectures with a sub-quadratic long mode
+(see DESIGN.md §3); encoder-only architectures have no decode step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import cache as cache_mod
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    phase: str                      # "train" | "prefill" | "decode"
+    long_mode: bool = False
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode", long_mode=True),
+}
+
+# number of stubbed modality-frontend positions for feature-input archs
+N_PATCHES = 1024
+
+
+def skip_reason(cfg: ModelConfig, shape: InputShape) -> Optional[str]:
+    """None if the (arch, shape) pair runs; otherwise a documented skip."""
+    if shape.phase == "decode" and cfg.is_encoder_only:
+        return "encoder-only architecture has no decode step"
+    if shape.long_mode and not cfg.supports_long_context():
+        return ("pure full-attention architecture: long_500k requires a "
+                "sub-quadratic variant (none configured)")
+    return None
+
+
+def token_splits(cfg: ModelConfig, seq_len: int):
+    """(n_feature_positions, n_token_positions) summing to seq_len."""
+    if cfg.frontend != "features":
+        return 0, seq_len
+    if cfg.is_encoder_only:
+        return seq_len, 0
+    n_feat = min(N_PATCHES, seq_len // 2)
+    return n_feat, seq_len - n_feat
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape,
+                param_dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    n_feat, n_tok = token_splits(cfg, S)
+
+    if shape.phase in ("train", "prefill"):
+        specs = {}
+        if n_feat:
+            specs["features"] = sds((B, n_feat, cfg.feature_dim), param_dtype)
+        if n_tok:
+            specs["tokens"] = sds((B, n_tok), i32)
+        if shape.phase == "train":
+            specs["labels"] = sds((B, S), i32)
+            specs["loss_mask"] = sds((B, S), param_dtype)
+        return specs
+
+    # decode: one token + cache of seq_len
+    cache = jax.eval_shape(
+        lambda: cache_mod.init_cache(cfg, B, S, long_mode=shape.long_mode,
+                                     dtype=param_dtype))
+    return {"tokens": sds((B, 1), i32), "cache": cache}

@@ -1,0 +1,1 @@
+"""HetRL scheduler: the paper's primary contribution in JAX-native form."""

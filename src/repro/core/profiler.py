@@ -1,0 +1,55 @@
+"""HetRL profiler (§4.1): collects hardware information.
+
+In a physical deployment this probes GPUs and links; here it (a) reads the
+device topology graph (the simulated environment's ground truth) and (b)
+calibrates *achievable* compute throughput of the actual local JAX device
+by micro-benchmarking matmuls — used by the Figure-7-style cost-model
+validation where tiny RL iterations really execute on this host.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.topology import Topology
+
+
+@dataclasses.dataclass
+class HardwareInfo:
+    tflops: Dict[int, float]
+    mem_gb: Dict[int, float]
+    hbm_gbps: Dict[int, float]
+    latency_s: "np.ndarray"
+    bandwidth_gbps: "np.ndarray"
+
+
+def profile_topology(topo: Topology) -> HardwareInfo:
+    return HardwareInfo(
+        tflops={d.id: d.spec.fp16_tflops for d in topo.devices},
+        mem_gb={d.id: d.spec.mem_gb for d in topo.devices},
+        hbm_gbps={d.id: d.spec.hbm_gbps for d in topo.devices},
+        latency_s=topo.latency_s.copy(),
+        bandwidth_gbps=topo.bandwidth_gbps.copy(),
+    )
+
+
+def calibrate_local_device(size: int = 1024, iters: int = 8,
+                           dtype="float32") -> float:
+    """Achievable matmul TFLOP/s of the local JAX device."""
+    import jax
+    import jax.numpy as jnp
+
+    x = jnp.ones((size, size), dtype)
+    f = jax.jit(lambda a, b: a @ b)
+    f(x, x).block_until_ready()
+    t0 = time.perf_counter()
+    y = x
+    for _ in range(iters):
+        y = f(y, x)
+    y.block_until_ready()
+    dt = time.perf_counter() - t0
+    flops = 2 * size ** 3 * iters
+    return flops / dt / 1e12

@@ -1,0 +1,82 @@
+"""Online redeployment (§6): medium-granularity adaptation to network /
+fleet changes by re-scheduling at checkpoint boundaries.
+
+The paper: "HetRL can accommodate medium-granularity network variability
+by performing scheduling before the end of the current iteration and
+during model checkpointing ... the updated plan is applied immediately
+after checkpointing."  `reschedule` warm-starts the hybrid scheduler from
+the incumbent plan's Level-1/2 decisions so a short budget suffices, and
+reports whether switching is worthwhile (new cost + amortized transition
+cost vs staying).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+from repro.core.costmodel import CostModel
+from repro.core.plan import BYTES_BF16, Plan, check_constraints
+from repro.core.sha import HybridScheduler, SearchResult
+from repro.core.topology import Topology
+from repro.core.workflow import RLWorkflow, TaskKind
+
+
+@dataclasses.dataclass
+class RedeployDecision:
+    switch: bool
+    plan: Plan
+    old_cost: float               # incumbent plan on the NEW topology
+    new_cost: float
+    transition_cost_s: float      # weight movement at the checkpoint
+    amortization_iters: int
+
+
+def _transition_cost(topo: Topology, wf: RLWorkflow, old: Plan,
+                     new: Plan) -> float:
+    """Weights that must move to devices not previously holding them:
+    approximated as full bf16 weights of every task whose device set
+    changed, over the bottleneck link between old and new sets."""
+    total = 0.0
+    for t in range(wf.n_tasks):
+        devs_old = {int(d) for d in old.assignment[t].reshape(-1)} \
+            if t in old.assignment else set()
+        devs_new = {int(d) for d in new.assignment[t].reshape(-1)}
+        moved = devs_new - devs_old
+        if not moved or not devs_old:
+            continue
+        nbytes = BYTES_BF16 * wf.task(t).model.total_weight_count \
+            * len(moved) / max(len(devs_new), 1)
+        best_bw = max(topo.beta(a, b)
+                      for a in devs_old for b in moved)
+        total += nbytes / (best_bw * 1e9)
+    return total
+
+
+def reschedule(topo_new: Topology, wf: RLWorkflow, incumbent: Plan, *,
+               budget: int = 150, amortization_iters: int = 20,
+               seed: int = 0) -> RedeployDecision:
+    cm = CostModel(topo_new, wf)
+    ok, _ = check_constraints(topo_new, wf, incumbent)
+    old_cost = cm.cost(incumbent) if ok else math.inf
+
+    sched = HybridScheduler(topo_new, wf, seed=seed, max_groupings=8,
+                            max_sizes_per_grouping=4)
+    # warm start: put the incumbent's grouping first among the arms
+    inc_grouping = tuple(sorted(tuple(sorted(g.tasks))
+                                for g in incumbent.groups))
+    if inc_grouping in sched.groupings:
+        sched.groupings = [inc_grouping] + \
+            [g for g in sched.groupings if g != inc_grouping]
+    result = sched.search(budget=budget)
+    if result.plan is None:
+        return RedeployDecision(False, incumbent, old_cost, math.inf, 0.0,
+                                amortization_iters)
+
+    trans = _transition_cost(topo_new, wf, incumbent, result.plan)
+    gain_per_iter = old_cost - result.cost
+    switch = gain_per_iter * amortization_iters > trans and \
+        result.cost < old_cost
+    return RedeployDecision(switch, result.plan if switch else incumbent,
+                            old_cost, result.cost, trans,
+                            amortization_iters)

@@ -1,0 +1,88 @@
+"""Flash-decode Pallas kernel: one query token vs a (possibly ring-buffer)
+KV cache, K-blocked online softmax with an explicit slot-validity mask
+(the caller derives it from ring positions / causal window).
+
+Grid (B, H, nk); kv blocks iterate innermost with running stats in VMEM
+scratch.  GQA via kv head = h // g.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, scale: float,
+                   cap: Optional[float], nk: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0, :].astype(jnp.float32)             # [hd]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)          # [bk, hd]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    bias = bias_ref[0, :].astype(jnp.float32)          # [bk] additive mask
+
+    s = (k @ q) * scale                                # [bk]
+    if cap is not None:
+        s = cap * jnp.tanh(s / cap)
+    s = s + bias
+    s2 = s[None, :]                                    # [1, bk]
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s2, axis=1, keepdims=True))
+    p = jnp.exp(s2 - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + p @ v
+    m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0, 0, :] = (
+            acc_scr[0] / jnp.maximum(l_scr[0, 0], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+def decode_attention_kernel(q, k, v, bias, *, cap: Optional[float] = None,
+                            bk: int = 512, interpret: bool = True):
+    """q: [B, H, hd]; k/v: [B, L, KV, hd]; bias: [B, L] additive
+    (0 = attend, NEG_INF = masked).  Returns [B, H, hd]."""
+    B, H, hd = q.shape
+    L, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    bk = min(bk, L)
+    assert L % bk == 0
+    nk = L // bk
+    kernel = functools.partial(_decode_kernel,
+                               scale=1.0 / float(hd) ** 0.5,
+                               cap=cap, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, hd), lambda b, h, j: (b, h, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda b, h, j: (b, j, h // g, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda b, h, j: (b, j, h // g, 0)),
+            pl.BlockSpec((1, bk), lambda b, h, j: (b, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd), lambda b, h, j: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, bias)

@@ -1,0 +1,42 @@
+"""Jitted wrapper for flash-decode (pads hd -> 128, L -> block multiple)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention_kernel
+
+NEG_INF = -1e30
+
+
+def _pad_axis(x, axis, mult, value=0.0):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cap", "bk", "interpret"))
+def decode_attention(q, k, v, bias, *, cap: Optional[float] = None,
+                     bk: int = 512, interpret: bool = True):
+    """q: [B,H,hd]; k/v: [B,L,KV,hd]; bias: [B,L] additive mask."""
+    B, H, hd = q.shape
+    L = k.shape[1]
+    hd_pad = max(hd + (-hd % 128), 128)
+    if hd_pad != hd:
+        q = _pad_axis(q, 2, 128) * jnp.asarray((hd_pad / hd) ** 0.5, q.dtype)
+        k = _pad_axis(k, 3, 128)
+        v = _pad_axis(v, 3, 128)
+    bk = min(bk, L)
+    kp = _pad_axis(k, 1, bk)
+    vp = _pad_axis(v, 1, bk)
+    biasp = _pad_axis(bias, 1, bk, value=NEG_INF)
+    out = decode_attention_kernel(q, kp, vp, biasp, cap=cap, bk=bk,
+                                  interpret=interpret)
+    return out[:, :, :hd]

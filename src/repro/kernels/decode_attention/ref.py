@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for flash-decode."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, bias, *, cap: Optional[float] = None):
+    """q: [B,H,hd]; k/v: [B,L,KV,hd]; bias: [B,L]."""
+    B, H, hd = q.shape
+    KV = k.shape[2]
+    g = H // KV
+    qg = q.reshape(B, KV, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,blkh->bkgl", qg, k.astype(jnp.float32))
+    s = s / jnp.sqrt(float(hd))
+    if cap is not None:
+        s = cap * jnp.tanh(s / cap)
+    s = s + bias[:, None, None, :]
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgl,blkh->bkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, H, hd).astype(q.dtype)

@@ -1,0 +1,86 @@
+"""Mamba selective-scan Pallas kernel.
+
+Grid (B, n_di_blocks, n_chunks): the SSM hidden state h [bd, ds] stays in
+VMEM scratch across time chunks (chunks iterate innermost); the channel
+dimension d_inner is blocked to bd so arbitrarily wide models fit VMEM.
+The recurrence is elementwise in d_inner — blocking it is embarrassingly
+parallel (this is also why the model shards d_inner over the mesh `model`
+axis; DESIGN.md §4).
+
+Inputs: dt, x [B, S, di]; Bm, Cm [B, S, ds]; A [di, ds].
+Output: y [B, S, di] = sum_s(h * C) (the D*x skip is applied by ops.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mamba_kernel(dt_ref, x_ref, b_ref, c_ref, a_ref, y_ref, h_out_ref,
+                  h_scr, *, chunk: int, nc: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    dt = dt_ref[0].astype(jnp.float32)      # [c, bd]
+    x = x_ref[0].astype(jnp.float32)        # [c, bd]
+    Bm = b_ref[0].astype(jnp.float32)       # [c, ds]
+    Cm = c_ref[0].astype(jnp.float32)       # [c, ds]
+    A = a_ref[...].astype(jnp.float32)      # [bd, ds]
+
+    def step(t, carry):
+        h, ys = carry
+        da = jnp.exp(dt[t][:, None] * A)                  # [bd, ds]
+        h = da * h + (dt[t] * x[t])[:, None] * Bm[t][None, :]
+        y_t = jnp.sum(h * Cm[t][None, :], axis=1)          # [bd]
+        ys = jax.lax.dynamic_update_index_in_dim(ys, y_t, t, 0)
+        return h, ys
+
+    h0 = h_scr[...]
+    ys0 = jnp.zeros((chunk, dt.shape[1]), jnp.float32)
+    h_end, ys = jax.lax.fori_loop(0, chunk, step, (h0, ys0))
+    y_ref[0] = ys.astype(y_ref.dtype)
+    h_scr[...] = h_end
+
+    @pl.when(ci == nc - 1)
+    def _finish():
+        h_out_ref[0] = h_end.astype(h_out_ref.dtype)
+
+
+def mamba_scan_kernel(dt, x, Bm, Cm, A, *, chunk: int = 64,
+                      bd: int = 256, interpret: bool = True):
+    """dt/x: [B, S, di]; Bm/Cm: [B, S, ds]; A: [di, ds].
+
+    Returns (y [B, S, di], h_end [B, di, ds])."""
+    B, S, di = x.shape
+    ds = Bm.shape[-1]
+    assert S % chunk == 0 and di % bd == 0
+    nc, nd = S // chunk, di // bd
+    kernel = functools.partial(_mamba_kernel, chunk=chunk, nc=nc)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, nd, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, bd), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((1, chunk, bd), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((1, chunk, ds), lambda b, d, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, ds), lambda b, d, c: (b, c, 0)),
+            pl.BlockSpec((bd, ds), lambda b, d, c: (d, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, bd), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((1, bd, ds), lambda b, d, c: (b, d, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, di), x.dtype),
+            jax.ShapeDtypeStruct((B, di, ds), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bd, ds), jnp.float32)],
+        interpret=interpret,
+    )(dt, x, Bm, Cm, A)

@@ -1,0 +1,29 @@
+"""Jitted wrapper: pads S to chunk multiple (dt=0 padding is exact: decay
+exp(0*A)=1 and contribution dt*x=0) and di to the block multiple."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mamba_scan.kernel import mamba_scan_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "bd", "interpret"))
+def mamba_scan(dt, x, Bm, Cm, A, *, chunk: int = 64, bd: int = 256,
+               interpret: bool = True):
+    B, S, di = x.shape
+    c = min(chunk, S)
+    pad_s = (-S) % c
+    bd = min(bd, di)
+    pad_d = (-di) % bd
+    pt = lambda t, ps, pd: jnp.pad(t, ((0, 0), (0, ps), (0, pd)))
+    dt2 = pt(dt, pad_s, pad_d)
+    x2 = pt(x, pad_s, pad_d)
+    Bm2 = pt(Bm, pad_s, 0)
+    Cm2 = pt(Cm, pad_s, 0)
+    A2 = jnp.pad(A, ((0, pad_d), (0, 0)))
+    y, h = mamba_scan_kernel(dt2, x2, Bm2, Cm2, A2, chunk=c, bd=bd,
+                             interpret=interpret)
+    return y[:, :S, :di], h[:, :di]

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle: explicit sequential selective scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mamba_scan_ref(dt, x, Bm, Cm, A):
+    """dt/x: [B,S,di]; Bm/Cm: [B,S,ds]; A: [di,ds].
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ;  y_t = h_t . C_t.
+    Returns (y [B,S,di], h_end [B,di,ds])."""
+    B, S, di = x.shape
+    ds = Bm.shape[-1]
+    f32 = lambda t: t.astype(jnp.float32)
+    dt, x, Bm, Cm = f32(dt), f32(x), f32(Bm), f32(Cm)
+    A = A.astype(jnp.float32)
+
+    def step(h, xs):
+        dt_t, x_t, b_t, c_t = xs
+        da = jnp.exp(dt_t[..., None] * A)              # [B, di, ds]
+        h = da * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bds,bs->bd", h, c_t)
+        return h, y
+
+    xs = (dt.transpose(1, 0, 2), x.transpose(1, 0, 2),
+          Bm.transpose(1, 0, 2), Cm.transpose(1, 0, 2))
+    h0 = jnp.zeros((B, di, ds), jnp.float32)
+    h_end, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2).astype(x.dtype), h_end

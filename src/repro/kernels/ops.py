@@ -1,0 +1,33 @@
+"""Top-level kernel dispatch used by the model layer when
+`set_attention_impl("pallas")` is active.  On CPU all kernels execute in
+interpret mode; on TPU set interpret=False (the TARGET configuration)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.flash_attention.ops import flash_attention as _flash
+from repro.kernels.mamba_scan.ops import mamba_scan
+from repro.kernels.rwkv6_scan.ops import rwkv6_scan
+
+INTERPRET = True  # flipped to False on real TPU deployments
+
+
+def flash_attention(q, k, v, q_pos, k_pos, *, causal=True, window=None,
+                    cap=None, k_valid=None):
+    """Adapter matching models.attention.multihead_attention's contract.
+
+    The Pallas kernel assumes contiguous arange positions (training /
+    prefill self-attention); anything else falls back to the jnp path."""
+    Sq, Sk = q.shape[1], k.shape[1]
+    contiguous = (Sq == Sk and q_pos.ndim == 1 and k_valid is None)
+    if not contiguous:
+        from repro.models import attention as attn
+        return attn.chunked_attention(q, k, v, q_pos, k_pos, causal=causal,
+                                      window=window, cap=cap,
+                                      k_valid=k_valid)
+    return _flash(q, k, v, causal=causal, window=window, cap=cap,
+                  interpret=INTERPRET)

@@ -1,0 +1,94 @@
+"""RWKV6 chunked linear-attention Pallas kernel.
+
+Grid (B, H, n_chunks): for each (batch, head), time chunks iterate
+sequentially with the [N, N] wkv state held in VMEM scratch — the
+cross-chunk recurrence never touches HBM.  Within a chunk the quadratic
+form with cumulative-decay ratios runs on the MXU.
+
+Inputs r,k,v,logw: [B, S, H, N] (fp32, S padded to chunk multiple),
+bonus u: [H, N].  Outputs y: [B, S, H, N] and the final state [B, H, N, N].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rwkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, s_out_ref,
+                 state_scr, *, chunk: int, nc: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    r = r_ref[0, :, 0, :].astype(jnp.float32)      # [c, N]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    logw = w_ref[0, :, 0, :].astype(jnp.float32)   # [c, N] (< 0)
+    u = u_ref[0, :].astype(jnp.float32)            # [N]
+    S = state_scr[...]                             # [N, N]
+
+    cum = jnp.cumsum(logw, axis=0)
+    cum_ex = cum - logw
+    total = cum[-1]
+
+    # inter-chunk
+    y_inter = (r * jnp.exp(cum_ex)) @ S            # [c, N]
+
+    # intra-chunk: att[t, s] = sum_n r[t,n] k[s,n] exp(cum_ex[t,n]-cum[s,n])
+    ratio = cum_ex[:, None, :] - cum[None, :, :]   # [c, c, N]
+    e = jnp.exp(jnp.minimum(ratio, 0.0))
+    att = jnp.sum(r[:, None, :] * k[None, :, :] * e, axis=-1)
+    mask = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) > \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    att = jnp.where(mask, att, 0.0)
+    diag = jnp.sum(r * u[None, :] * k, axis=-1)    # [c]
+    y = y_inter + att @ v + diag[:, None] * v
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    # state update
+    k_dec = k * jnp.exp(total[None, :] - cum)
+    S_new = jnp.exp(total)[:, None] * S + \
+        jax.lax.dot_general(k_dec, v, (((0,), (0,)), ((), ())))
+    state_scr[...] = S_new
+
+    @pl.when(ci == nc - 1)
+    def _finish():
+        s_out_ref[0, 0, :, :] = S_new.astype(s_out_ref.dtype)
+
+
+def rwkv6_scan_kernel(r, k, v, logw, u, *, chunk: int = 64,
+                      interpret: bool = True):
+    """r/k/v/logw: [B, S, H, N] (S % chunk == 0); u: [H, N].
+
+    Returns (y [B, S, H, N], state [B, H, N, N])."""
+    B, S, H, N = r.shape
+    assert S % chunk == 0
+    nc = S // chunk
+    kernel = functools.partial(_rwkv_kernel, chunk=chunk, nc=nc)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, N), lambda b, h, c: (h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, N, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, N), r.dtype),
+            jax.ShapeDtypeStruct((B, H, N, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, N), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, logw, u)

@@ -1,0 +1,29 @@
+"""Jitted wrapper: pads S to the chunk multiple with zero k/v (decay of the
+padding does not disturb y for real positions since they precede the pad)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6_scan.kernel import rwkv6_scan_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_scan(r, k, v, logw, u, *, chunk: int = 64,
+               interpret: bool = True):
+    B, S, H, N = r.shape
+    c = min(chunk, S)
+    pad = (-S) % c
+    if pad:
+        padt = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r2, k2, v2 = padt(r), padt(k), padt(v)
+        logw2 = padt(logw)
+    else:
+        r2, k2, v2, logw2 = r, k, v, logw
+    # padded positions have logw = 0 (decay 1) and k = v = 0, so the state
+    # passes through padding untouched — no correction needed.
+    y, state = rwkv6_scan_kernel(r2, k2, v2, logw2, u, chunk=c,
+                                 interpret=interpret)
+    return y[:, :S], state

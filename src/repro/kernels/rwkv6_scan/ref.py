@@ -1,0 +1,28 @@
+"""Pure-jnp oracle: explicit per-token RWKV6 recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_scan_ref(r, k, v, logw, u):
+    """r/k/v/logw: [B, S, H, N]; u: [H, N].
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T ;  y_t = r_t (diag(u) k_t v_t^T + S_{t-1}).
+    Returns (y [B,S,H,N], state [B,H,N,N])."""
+    B, S, H, N = r.shape
+    f32 = lambda t: t.astype(jnp.float32)
+    r, k, v, logw = f32(r), f32(k), f32(v), f32(logw)
+    u = u.astype(jnp.float32)
+
+    def step(state, xs):
+        r_t, k_t, v_t, w_t = xs                     # [B, H, N]
+        kv = k_t[..., :, None] * v_t[..., None, :]  # [B, H, N, N]
+        y = jnp.einsum("bhn,bhnm->bhm", r_t,
+                       u[None, :, :, None] * kv + state)
+        state = jnp.exp(w_t)[..., None] * state + kv
+        return state, y
+
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (r, k, v, logw))
+    state0 = jnp.zeros((B, H, N, N), jnp.float32)
+    state, ys = jax.lax.scan(step, state0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(r.dtype), state

@@ -1,0 +1,406 @@
+"""Loop-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body ONCE, which
+silently undercounts scan-over-layers models by ~n_layers×.  This module
+parses the optimized HLO text, builds the computation call graph (fusions,
+calls, while bodies with trip counts recovered from the loop condition),
+and accumulates:
+
+  * FLOPs        — dot_general (2*M*N*K from the printed dimension numbers)
+                   plus 1 flop/element for elementwise arithmetic;
+  * bytes        — operand + output bytes of every op (HBM-traffic proxy);
+  * collectives  — operand bytes per collective type (all-gather,
+                   all-reduce, reduce-scatter, all-to-all,
+                   collective-permute), the §Roofline collective term.
+
+All values are PER DEVICE (the compiled module is the per-device SPMD
+program).  Trip counts: the largest integer constant in the while
+condition computation (standard lax.scan lowering); 1 if none found.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16, "token": 0, "s4": 1, "u4": 1}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_ELEMENTWISE = {"add", "subtract", "multiply", "divide", "maximum",
+                "minimum", "exponential", "tanh", "rsqrt", "sqrt", "power",
+                "negate", "abs", "log", "logistic", "cosine", "sine",
+                "expm1", "log1p"}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _parse_shape(s: str) -> Tuple[str, List[int]]:
+    m = _SHAPE_RE.match(s.strip())
+    if not m:
+        return "f32", []
+    dt, dims = m.groups()
+    return dt, [int(d) for d in dims.split(",") if d]
+
+
+def _shape_bytes(s: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(s):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _shape_elems(s: str) -> int:
+    m = _SHAPE_RE.match(s.strip())
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class CompStats:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in _COLLECTIVES})
+    # (callee, kind) kind in {"call", "while"}; while carries (cond, body)
+    calls: List[Tuple[str, str]] = dataclasses.field(default_factory=list)
+    whiles: List[Tuple[str, str]] = dataclasses.field(default_factory=list)
+    max_constant: int = 1
+
+
+_COMP_START = re.compile(
+    r"^(ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^=]*\))?\s*->.*\{\s*$")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
+    r"((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s*"
+    r"([\w\-]+)\((.*)$")
+_PARAM_SIG = re.compile(r"%?([\w\.\-]+):\s*((?:\([^)]*\))|(?:[a-z0-9]+"
+                        r"\[[0-9,]*\](?:\{[^}]*\})?))")
+
+
+_COMP_NAME = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+
+
+def split_computations(hlo: str) -> Dict[str, List[str]]:
+    """Computation name -> lines.  Long headers wrap across physical
+    lines; they are joined until the opening '{' is seen."""
+    comps: Dict[str, List[str]] = {}
+    lines = hlo.splitlines()
+    i = 0
+    entry = None
+    n = len(lines)
+    while i < n:
+        line = lines[i]
+        m = _COMP_NAME.match(line) if not line.startswith(" ") else None
+        if m and ("->" in line or "{" not in line):
+            header = line
+            while not header.rstrip().endswith("{") and i + 1 < n:
+                i += 1
+                header += " " + lines[i].strip()
+            if not header.rstrip().endswith("{"):
+                i += 1
+                continue
+            name = m.group(2)
+            if m.group(1):
+                entry = name
+            body = [header]
+            i += 1
+            while i < n:
+                body.append(lines[i])
+                if lines[i].strip() == "}" and not lines[i].startswith("  "):
+                    break
+                i += 1
+            comps[name] = body
+        i += 1
+    if entry:
+        comps["__entry__"] = comps[entry]
+    return comps
+
+
+def _operand_names(args: str) -> List[str]:
+    # strip anything after "), " attributes by cutting at the matching depth
+    depth = 0
+    out = []
+    cur = []
+    for ch in args:
+        if ch == "(":
+            depth += 1
+            cur.append(ch)
+        elif ch == ")":
+            if depth == 0:
+                break
+            depth -= 1
+            cur.append(ch)
+        elif ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    names = []
+    for o in out:
+        o = o.strip()
+        m = re.search(r"%([\w\.\-]+)\s*$", o)
+        if m:
+            names.append(m.group(1))
+        else:
+            m2 = re.match(r"([\w\.\-]+)$", o)
+            if m2:
+                names.append(m2.group(1))
+    return names
+
+
+def find_dus_root_update_bytes(lines: List[str]) -> Optional[int]:
+    """If the computation's ROOT is a dynamic-update-slice (optionally
+    behind a trailing convert — the CPU backend shadows bf16 buffers in
+    f32 around dots; on TPU the buffer stays bf16 and the update is in
+    place), return the update operand's byte size; else None."""
+    shapes: Dict[str, str] = {}
+    dus_update: Dict[str, Optional[int]] = {}
+    if lines:
+        for m in _PARAM_SIG.finditer(lines[0]):
+            shapes[m.group(1)] = m.group(2)
+    for line in lines[1:]:
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, out_shape, op, rest = m.groups()
+        shapes[name] = out_shape
+        ops = _operand_names(rest)
+        if op == "dynamic-update-slice" and len(ops) > 1:
+            dus_update[name] = _shape_bytes(shapes.get(ops[1], ""))
+        if line.lstrip().startswith("ROOT"):
+            if op == "dynamic-update-slice" and len(ops) > 1:
+                return _shape_bytes(shapes.get(ops[1], ""))
+            if op == "convert" and ops and ops[0] in dus_update:
+                return dus_update[ops[0]]
+    return None
+
+
+_PARAM_IDX = re.compile(r"^param_(\d+)")
+
+
+def fusion_param_slice_reads(lines: List[str]) -> Dict[int, int]:
+    """Params of a fused computation consumed ONLY by a dynamic-slice:
+    the fusion reads just the slice, not the whole operand.  Returns
+    {param_index: effective_read_bytes}."""
+    shapes: Dict[str, str] = {}
+    param_idx: Dict[str, int] = {}
+    if lines:
+        for m in _PARAM_SIG.finditer(lines[0]):
+            shapes[m.group(1)] = m.group(2)
+            mi = _PARAM_IDX.match(m.group(1))
+            if mi:
+                param_idx[m.group(1)] = int(mi.group(1))
+    uses: Dict[str, List[Tuple[str, str]]] = {p: [] for p in param_idx}
+    for line in lines[1:]:
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, out_shape, op, rest = m.groups()
+        shapes[name] = out_shape
+        for o in _operand_names(rest):
+            if o in uses:
+                uses[o].append((op, out_shape))
+    out: Dict[int, int] = {}
+    for p, us in uses.items():
+        if len(us) == 1 and us[0][0] == "dynamic-slice":
+            out[param_idx[p]] = _shape_bytes(us[0][1])
+    return out
+
+
+def analyze_computation(lines: List[str],
+                        fusion_dus: Optional[Dict[str, int]] = None,
+                        fusion_slices: Optional[Dict[str, Dict[int, int]]]
+                        = None) -> CompStats:
+    st = CompStats()
+    fusion_dus = fusion_dus or {}
+    shapes: Dict[str, str] = {}
+    # parameter shapes from the signature line
+    if lines:
+        for m in _PARAM_SIG.finditer(lines[0]):
+            shapes[m.group(1)] = m.group(2)
+    for line in lines[1:]:
+        m = _OP_RE.match(line)
+        if not m:
+            cm = re.search(r"constant\((\d+)\)", line)
+            if cm:
+                st.max_constant = max(st.max_constant, int(cm.group(1)))
+            continue
+        name, out_shape, op, rest = m.groups()
+        shapes[name] = out_shape
+        out_bytes = _shape_bytes(out_shape)
+        operands = _operand_names(rest)
+        in_bytes = sum(_shape_bytes(shapes.get(o, "")) for o in operands)
+        # HBM-traffic accounting: tuple plumbing is free; dynamic
+        # (update-)slice touches only the slice, not the full buffer.
+        if op in ("get-tuple-element", "tuple", "parameter", "constant",
+                  "iota", "after-all", "partition-id", "replica-id"):
+            pass
+        elif op == "dynamic-slice":
+            st.bytes += 2 * out_bytes
+        elif op == "dynamic-update-slice":
+            upd = _shape_bytes(shapes.get(operands[1], "")) \
+                if len(operands) > 1 else 0
+            st.bytes += 2 * upd
+        elif op == "while":
+            # carried tuple enters/leaves once; body accounting is separate
+            st.bytes += out_bytes
+        elif op == "fusion":
+            mc0 = re.search(r"calls=%?([\w\.\-]+)", line)
+            callee = mc0.group(1) if mc0 else None
+            if callee in fusion_dus:
+                # in-place (DUS-rooted) fusion: traffic = the update slice
+                st.bytes += 2 * fusion_dus[callee]
+            else:
+                eff_in = 0
+                slices = (fusion_slices or {}).get(callee, {})
+                for oi, o in enumerate(operands):
+                    if oi in slices:
+                        eff_in += slices[oi]  # fused dynamic-slice read
+                    else:
+                        eff_in += _shape_bytes(shapes.get(o, ""))
+                st.bytes += out_bytes + eff_in
+        else:
+            st.bytes += out_bytes + in_bytes
+
+        cm = re.search(r"constant\((\d+)\)", line)
+        if cm:
+            st.max_constant = max(st.max_constant, int(cm.group(1)))
+
+        if op == "dot":
+            lhs = shapes.get(operands[0], "") if operands else ""
+            _, lhs_dims = _parse_shape(lhs)
+            mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+            k = 1
+            if mc and lhs_dims:
+                for d in mc.group(1).split(","):
+                    if d and int(d) < len(lhs_dims):
+                        k *= lhs_dims[int(d)]
+            st.flops += 2.0 * _shape_elems(out_shape) * k
+        elif op in _ELEMENTWISE:
+            st.flops += _shape_elems(out_shape)
+        elif op == "convolution":
+            # rough: 2 * out_elems * (in_channels * window) — window parse
+            mw = re.search(r"window=\{size=([0-9x]+)", line)
+            win = 1
+            if mw:
+                for d in mw.group(1).split("x"):
+                    win *= int(d)
+            lhs = shapes.get(operands[0], "") if operands else ""
+            _, ld = _parse_shape(lhs)
+            cin = ld[1] if len(ld) > 1 else 1
+            st.flops += 2.0 * _shape_elems(out_shape) * win * cin
+
+        base = op
+        for c in _COLLECTIVES:
+            if base.startswith(c):
+                if base.endswith("-done"):
+                    break
+                st.coll[c] += in_bytes
+                break
+
+        if op == "fusion" or op == "call":
+            mc2 = re.search(r"(?:calls|to_apply)=%?([\w\.\-]+)", line)
+            if mc2:
+                st.calls.append((mc2.group(1), op))
+        elif op == "while":
+            mb = re.search(r"body=%?([\w\.\-]+)", line)
+            mcnd = re.search(r"condition=%?([\w\.\-]+)", line)
+            if mb and mcnd:
+                st.whiles.append((mcnd.group(1), mb.group(1)))
+        elif op == "conditional":
+            for mm in re.finditer(r"(?:branch_computations=\{([^}]*)\}|"
+                                  r"(?:true|false)_computation=%?([\w\.\-]+))",
+                                  line):
+                names = (mm.group(1) or mm.group(2) or "")
+                for nm in names.split(","):
+                    nm = nm.strip().lstrip("%")
+                    if nm:
+                        st.calls.append((nm, "conditional"))
+    return st
+
+
+@dataclasses.dataclass
+class HLOCost:
+    flops: float
+    bytes: float
+    collectives: Dict[str, float]
+
+    @property
+    def collective_total(self) -> float:
+        return sum(self.collectives.values())
+
+
+def analyze(hlo: str) -> HLOCost:
+    comps = split_computations(hlo)
+    fusion_dus = {}
+    fusion_slices = {}
+    for n, ls in comps.items():
+        if n == "__entry__":
+            continue
+        b = find_dus_root_update_bytes(ls)
+        if b is not None:
+            fusion_dus[n] = b
+        sl = fusion_param_slice_reads(ls)
+        if sl:
+            fusion_slices[n] = sl
+    stats = {n: analyze_computation(ls, fusion_dus, fusion_slices)
+             for n, ls in comps.items() if n != "__entry__"}
+    memo: Dict[str, Tuple[float, float, Dict[str, float]]] = {}
+
+    def total(name: str, depth=0):
+        if name in memo:
+            return memo[name]
+        if name not in stats or depth > 64:
+            return 0.0, 0.0, {c: 0.0 for c in _COLLECTIVES}
+        st = stats[name]
+        f, b = st.flops, st.bytes
+        coll = dict(st.coll)
+        for callee, kind in st.calls:
+            cf, cb, cc = total(callee, depth + 1)
+            f += cf
+            # fusion internals never materialize: their HBM traffic is the
+            # fusion op's boundary bytes, already counted in this caller
+            if kind != "fusion":
+                b += cb
+            for c in _COLLECTIVES:
+                coll[c] += cc[c]
+        for cond, body in st.whiles:
+            trips = stats[cond].max_constant if cond in stats else 1
+            cf, cb, cc = total(body, depth + 1)
+            cf2, cb2, cc2 = total(cond, depth + 1)
+            f += trips * (cf + cf2)
+            b += trips * (cb + cb2)
+            for c in _COLLECTIVES:
+                coll[c] += trips * (cc[c] + cc2[c])
+        memo[name] = (f, b, coll)
+        return memo[name]
+
+    entry_name = None
+    for n, ls in comps.items():
+        if n == "__entry__":
+            continue
+        if ls and ls[0].startswith("ENTRY"):
+            entry_name = n
+            break
+    if entry_name is None:
+        entry_name = max(stats, key=lambda n: stats[n].flops, default=None)
+    f, b, coll = total(entry_name) if entry_name else (0.0, 0.0, {})
+    return HLOCost(f, b, coll)

@@ -1,0 +1,153 @@
+"""Dry-run 'profiler': rank the stored HLO's heaviest contributors.
+
+Since there is no real-TPU trace, the profile IS the lowered module: this
+tool attributes loop-aware FLOPs / bytes / collective volume to individual
+ops (multiplied through the call graph) and prints the top offenders —
+the §Perf methodology's replacement for a wall-clock profile.
+
+    PYTHONPATH=src python -m repro.launch.hlo_profile \
+        results/dryrun/qwen3-0.6b__decode_32k__single.hlo.zst --top 15
+"""
+from __future__ import annotations
+
+import argparse
+import re
+from typing import Dict, List, Tuple
+
+import zstandard
+
+from repro.launch import hlo_analysis as ha
+
+
+def op_contributions(hlo: str):
+    comps = ha.split_computations(hlo)
+    stats = {n: ha.analyze_computation(ls) for n, ls in comps.items()
+             if n != "__entry__"}
+    fusion_dus = {}
+    fusion_slices = {}
+    for n, ls in comps.items():
+        if n != "__entry__":
+            b = ha.find_dus_root_update_bytes(ls)
+            if b is not None:
+                fusion_dus[n] = b
+            sl = ha.fusion_param_slice_reads(ls)
+            if sl:
+                fusion_slices[n] = sl
+
+    # computation -> (execution multiplier, inside_fusion flag)
+    mult: Dict[str, float] = {}
+    in_fusion: Dict[str, bool] = {}
+    entry = None
+    for n, ls in comps.items():
+        if n != "__entry__" and ls and ls[0].startswith("ENTRY"):
+            entry = n
+
+    def walk(name: str, m: float, fused: bool, depth=0):
+        if name not in stats or depth > 64:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        in_fusion[name] = in_fusion.get(name, True) and fused
+        st = stats[name]
+        for callee, kind in st.calls:
+            walk(callee, m, fused or kind == "fusion", depth + 1)
+        for cond, body in st.whiles:
+            trips = stats[cond].max_constant if cond in stats else 1
+            walk(body, m * trips, fused, depth + 1)
+            walk(cond, m * trips, fused, depth + 1)
+
+    if entry:
+        walk(entry, 1.0, False)
+
+    rows: List[Tuple[float, float, float, str, str]] = []
+    for name, lines in comps.items():
+        if name == "__entry__" or name not in mult:
+            continue
+        m = mult[name]
+        fused_ctx = in_fusion.get(name, False)
+        shapes: Dict[str, str] = {}
+        if lines:
+            for pm in ha._PARAM_SIG.finditer(lines[0]):
+                shapes[pm.group(1)] = pm.group(2)
+        for line in lines[1:]:
+            om = ha._OP_RE.match(line)
+            if not om:
+                continue
+            opname, out_shape, op, rest = om.groups()
+            shapes[opname] = out_shape
+            out_b = ha._shape_bytes(out_shape)
+            operands = ha._operand_names(rest)
+            in_b = sum(ha._shape_bytes(shapes.get(o, "")) for o in operands)
+            fl = 0.0
+            by = 0.0
+            if op == "dot":
+                lhs = shapes.get(operands[0], "") if operands else ""
+                _, lhs_dims = ha._parse_shape(lhs)
+                mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+                k = 1
+                if mc and lhs_dims:
+                    for d in mc.group(1).split(","):
+                        if d and int(d) < len(lhs_dims):
+                            k *= lhs_dims[int(d)]
+                fl = 2.0 * ha._shape_elems(out_shape) * k
+                by = out_b + in_b
+            elif op in ha._ELEMENTWISE:
+                fl = ha._shape_elems(out_shape)
+                by = out_b + in_b
+            elif op in ("get-tuple-element", "tuple", "parameter",
+                        "constant", "iota", "after-all"):
+                continue
+            elif op == "dynamic-slice":
+                by = 2 * out_b
+            elif op == "dynamic-update-slice":
+                by = 2 * (ha._shape_bytes(shapes.get(operands[1], ""))
+                          if len(operands) > 1 else 0)
+            elif op == "fusion":
+                mc0 = re.search(r"calls=%?([\w\.\-]+)", line)
+                callee = mc0.group(1) if mc0 else None
+                if callee in fusion_dus:
+                    by = 2 * fusion_dus[callee]
+                else:
+                    slices = fusion_slices.get(callee, {})
+                    eff_in = 0
+                    for oi, o in enumerate(operands):
+                        eff_in += slices[oi] if oi in slices else \
+                            ha._shape_bytes(shapes.get(o, ""))
+                    by = out_b + eff_in
+            elif op in ("call", "while", "conditional"):
+                by = out_b if op == "while" else out_b + in_b
+            else:
+                by = out_b + in_b
+            if fused_ctx:
+                by = 0.0  # fusion internals never touch HBM
+            coll = 0.0
+            for c in ha._COLLECTIVES:
+                if op.startswith(c) and not op.endswith("-done"):
+                    coll = in_b
+            rows.append((fl * m, by * m, coll * m,
+                         f"{op} {out_shape[:42]}", f"{name[:28]}×{m:.0f}"))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("hlo_path")
+    ap.add_argument("--top", type=int, default=12)
+    ap.add_argument("--sort", choices=["flops", "bytes", "coll"],
+                    default="bytes")
+    args = ap.parse_args()
+    with open(args.hlo_path, "rb") as f:
+        data = f.read()
+    hlo = zstandard.ZstdDecompressor().decompress(data).decode() \
+        if args.hlo_path.endswith(".zst") else data.decode()
+    rows = op_contributions(hlo)
+    key = {"flops": 0, "bytes": 1, "coll": 2}[args.sort]
+    rows.sort(key=lambda r: -r[key])
+    tot = [sum(r[i] for r in rows) for i in range(3)]
+    print(f"totals: flops={tot[0]:.3e} bytes={tot[1]:.3e} coll={tot[2]:.3e}")
+    print(f"{'flops':>10s} {'bytes':>10s} {'coll':>10s}  op")
+    for r in rows[:args.top]:
+        print(f"{r[0]:10.2e} {r[1]:10.2e} {r[2]:10.2e}  {r[3]}  [{r[4]}]")
+
+
+if __name__ == "__main__":
+    main()

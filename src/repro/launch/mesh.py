@@ -1,0 +1,39 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (not module-level constants) so importing this module
+never touches JAX device state.  The dry-run entrypoint sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax import;
+everything else sees the real device count.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) = 256 chips, axes (data, model).
+    Multi-pod: (2, 16, 16) = 512 chips, axes (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Tiny mesh over whatever devices exist (CPU smoke runs)."""
+    n = jax.device_count()
+    data = max(n // model_axis, 1)
+    return jax.make_mesh((data, model_axis), ("data", "model"))
+
+
+def data_axes(mesh) -> Tuple[str, ...]:
+    """Axes that carry the batch dimension."""
+    names = mesh.axis_names
+    return tuple(a for a in names if a in ("pod", "data"))
+
+
+def batch_spec(mesh) -> P:
+    da = data_axes(mesh)
+    return P(da if len(da) > 1 else da[0])

@@ -1,0 +1,49 @@
+"""Recompute the loop-aware metrics of existing dry-run JSONs from their
+stored .hlo.zst files (no recompilation).
+
+    PYTHONPATH=src python -m repro.launch.reanalyze [--dir results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+import zstandard
+
+from repro.launch import hlo_analysis
+
+
+def reanalyze(result_dir: str) -> None:
+    for path in sorted(glob.glob(os.path.join(result_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if "skipped" in rec:
+            continue
+        hlo_path = path.replace(".json", ".hlo.zst")
+        if not os.path.exists(hlo_path):
+            print(f"no HLO for {os.path.basename(path)}; skipping")
+            continue
+        with open(hlo_path, "rb") as f:
+            hlo = zstandard.ZstdDecompressor().decompress(f.read()).decode()
+        la = hlo_analysis.analyze(hlo)
+        rec["flops_per_device"] = float(la.flops)
+        rec["bytes_per_device"] = float(la.bytes)
+        rec["collective_bytes_per_device"] = {
+            k: float(v) for k, v in la.collectives.items()}
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2)
+        print(f"reanalyzed {os.path.basename(path)}: "
+              f"flops={la.flops:.3e} bytes={la.bytes:.3e}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    args = ap.parse_args()
+    reanalyze(args.dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Roofline analysis (§Roofline deliverable).
+
+Reads the dry-run JSONs and derives, per (arch × shape × mesh):
+
+    compute term    = FLOPs_per_device / peak_FLOP/s
+    memory term     = bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / (links * link_bw)
+
+(the per-device SPMD module already divides global work by chip count, so
+the terms use per-device quantities directly).  Hardware constants: TPU
+v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI (3D-torus: 3
+links usable per axis-aligned collective is conservative; we charge 1
+link, the worst case, and note it).
+
+Also reports MODEL_FLOPS = 6·N·D (6·N_active·D for MoE) and the
+usefulness ratio MODEL_FLOPS / HLO_FLOPs_global.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # B/s / chip
+LINK_BW = 50e9           # B/s / ICI link (1 link charged: worst case)
+
+
+def roofline_terms(rec: Dict) -> Optional[Dict]:
+    if "skipped" in rec:
+        return None
+    n_dev = rec["n_devices"]
+    comp = rec["flops_per_device"] / PEAK_FLOPS
+    mem = rec["bytes_per_device"] / HBM_BW
+    coll_b = rec["collective_bytes_per_device"]
+    coll = sum(v for k, v in coll_b.items() if k != "total") / LINK_BW
+    terms = {"compute_s": comp, "memory_s": mem, "collective_s": coll}
+    dominant = max(terms, key=terms.get)
+    # MODEL_FLOPS: tokens processed globally
+    if rec["phase"] == "train":
+        tokens = rec["seq_len"] * rec["global_batch"]
+        factor = 6.0
+    elif rec["phase"] == "prefill":
+        tokens = rec["seq_len"] * rec["global_batch"]
+        factor = 2.0
+    else:  # decode: one token per sequence
+        tokens = rec["global_batch"]
+        factor = 2.0
+    model_flops = factor * rec["active_params"] * tokens
+    hlo_global = rec["flops_per_device"] * n_dev
+    return {
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "model_flops": model_flops,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": model_flops / hlo_global if hlo_global else 0.0,
+        "bound_est_s": max(terms.values()),
+    }
+
+
+def load_results(result_dir: str) -> List[Dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(result_dir, "*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def table(result_dir: str = "results/dryrun") -> str:
+    rows = []
+    hdr = (f"{'arch':26s} {'shape':12s} {'mesh':6s} {'comp(s)':>9s} "
+           f"{'mem(s)':>9s} {'coll(s)':>9s} {'dominant':>10s} "
+           f"{'useful':>7s}")
+    rows.append(hdr)
+    rows.append("-" * len(hdr))
+    for rec in load_results(result_dir):
+        mesh = "multi" if rec.get("multi_pod") else "single"
+        if "skipped" in rec:
+            rows.append(f"{rec['arch']:26s} {rec['shape']:12s} {mesh:6s} "
+                        f"SKIP: {rec['skipped']}")
+            continue
+        t = roofline_terms(rec)
+        rows.append(
+            f"{rec['arch']:26s} {rec['shape']:12s} {mesh:6s} "
+            f"{t['compute_s']:9.4f} {t['memory_s']:9.4f} "
+            f"{t['collective_s']:9.4f} {t['dominant']:>10s} "
+            f"{t['useful_ratio']:7.3f}")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    args = ap.parse_args()
+    print(table(args.dir))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,154 @@
+"""train_step / prefill_step / serve_step builders with mesh shardings.
+
+These are the functions the dry-run lowers for every (arch × shape × mesh)
+and the real drivers (train.py / serve.py) execute on host meshes.
+"""
+from __future__ import annotations
+
+import functools
+import re
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import InputShape
+from repro.launch.mesh import batch_spec, data_axes
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.optim import adam
+from repro.parallel import sharding as sh
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def lm_loss(params, cfg: ModelConfig, batch, *, long_mode=False,
+            remat=True):
+    out = T.forward(params, cfg, batch, long_mode=long_mode, remat=remat)
+    logits = out["logits"].astype(jnp.float32)
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is not None:
+        nll = nll * mask
+        denom = jnp.maximum(mask.sum(), 1.0)
+    else:
+        denom = float(nll.size)
+    return nll.sum() / denom + out["aux_loss"]
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, opt_cfg: Optional[adam.AdamConfig]
+                    = None, *, remat: bool = True):
+    opt_cfg = opt_cfg or adam.AdamConfig()
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: lm_loss(p, cfg, batch, remat=remat))(params)
+        new_params, new_opt, om = adam.adam_update(
+            params, grads, opt_state, opt_cfg)
+        return new_params, new_opt, {"loss": loss, **om}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, long_mode: bool = False,
+                      max_cache_len: Optional[int] = None):
+    def prefill_step(params, batch):
+        out = T.forward(params, cfg, batch, long_mode=long_mode,
+                        return_cache=True, max_cache_len=max_cache_len,
+                        remat=False)
+        return out["logits"][:, -1], out["cache"]
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, *, long_mode: bool = False):
+    def serve_step(params, batch):
+        logits, cache = T.decode_step(params, cfg, batch["tokens"],
+                                      batch["cache"], long_mode=long_mode)
+        return logits, cache
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Sharding trees
+# ---------------------------------------------------------------------------
+
+def _map_axes(spec: P, mesh) -> P:
+    """Translate the canonical ('data','model') specs onto this mesh:
+    on a multi-pod mesh, 'data' stays the within-pod axis (params are
+    replicated across pods — pure DP over 'pod', DESIGN.md §4)."""
+    return P(*(list(spec) + [])[:])
+
+
+def param_shardings(mesh, params_shape):
+    specs = sh.param_tree_specs(params_shape)
+    return sh.named_shardings(mesh, specs, params_shape)
+
+
+def opt_shardings(mesh, params_shape):
+    pspecs = sh.param_tree_specs(params_shape)
+    step = NamedSharding(mesh, P())
+    mk = lambda: sh.named_shardings(mesh, pspecs, params_shape)
+    return {"step": step, "m": mk(), "v": mk()}
+
+
+def batch_shardings(mesh, batch_tree, shape: InputShape):
+    """tokens/labels/masks: batch over data axes; cache/state leaves per
+    name-specific rules (KV cache, RWKV wkv state, Mamba conv/ssm state)."""
+    da = data_axes(mesh)
+    data = da if len(da) > 1 else da[0]
+    b1 = shape.global_batch == 1          # long-context decode
+    bspec = None if b1 else data
+
+    def spec_for(path, leaf):
+        name = sh.path_str(path)
+        r = leaf.ndim
+        if "cache" in name:
+            if name.endswith("pos"):
+                return P()
+            if re.search(r"/(k|v)$", name):          # [R, B, L, KV, hd]
+                # Sequence-shard LARGE caches over `model` (flash-decoding
+                # style): KV-head counts rarely divide the model axis, and
+                # head-replicated caches force whole-cache reshards (§Perf
+                # iteration 1).  Small ring-buffer (sliding-window) caches
+                # stay replicated over `model`: their dynamic-slot updates
+                # across a sharded sequence cost more than the reads save.
+                # batch=1 long-context also shards the sequence over `data`.
+                L = leaf.shape[2]
+                if L <= 8192:
+                    return P(None, bspec, None, None, None)
+                if b1:
+                    return P(None, None, (*([data] if isinstance(data, str)
+                                            else list(data)), "model"),
+                             None, None)
+                return P(None, data, "model", None, None)
+            if name.endswith("wkv"):                  # [R, B, H, N, N]
+                return P(None, bspec, "model", None, None)
+            if name.endswith("ssm"):                  # [R, B, di, ds]
+                return P(None, bspec, "model", None)
+            if name.endswith("conv"):                 # [R, B, dc-1, di]
+                return P(None, bspec, None, "model")
+            if r == 3:                                # shift states [R,B,d]
+                return P(None, bspec, None)
+            return P(*([None] * r))
+        if r == 0:
+            return P()
+        return P(*([bspec] + [None] * (r - 1)))
+
+    specs = jax.tree_util.tree_map_with_path(spec_for, batch_tree)
+    return sh.named_shardings(mesh, specs, batch_tree)
+
+
+def activation_rules(mesh, shape: InputShape):
+    da = data_axes(mesh)
+    return sh.default_activation_rules(
+        data_axes=da, model_axis="model",
+        seq_shard=(shape.phase == "train"))

@@ -1,0 +1,247 @@
+"""Attention: GQA, RoPE, sliding windows, logit softcap, qk-norm.
+
+Two jnp execution paths:
+  * ``plain``   — materializes the full score matrix (small sequences).
+  * ``chunked`` — flash-style blockwise online softmax (lax.scan over KV
+    blocks nested in a scan over Q blocks). Never materializes more than
+    [B, H, q_chunk, k_chunk] scores; required for 32k+ prefill.
+
+The Pallas TPU kernel (repro.kernels.flash_attention) implements the same
+contract; `set_attention_impl("pallas")` switches the model over to it.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, dense_init, rmsnorm, softcap
+
+_IMPL = "jnp"  # "jnp" | "pallas"
+# use the chunked (flash-style) path when S_q * S_k exceeds thr**2 —
+# materializing full score matrices at train_4k scale dominated the HBM
+# roofline term (§Perf granite iteration 4)
+_CHUNK_THRESHOLD = 2048
+_Q_CHUNK = 1024
+_K_CHUNK = 1024
+
+NEG_INF = -1e30
+
+
+def set_attention_impl(impl: str) -> None:
+    global _IMPL
+    assert impl in ("jnp", "pallas")
+    _IMPL = impl
+
+
+def get_attention_impl() -> str:
+    return _IMPL
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, dtype):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, cfg.n_heads * hd), dtype=dtype),
+        "wkv": dense_init(ks[1], (d, 2 * cfg.n_kv_heads * hd), dtype=dtype),
+        "wo": dense_init(ks[2], (cfg.n_heads * hd, d), dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": jnp.ones((hd,), dtype)}
+        p["k_norm"] = {"scale": jnp.ones((hd,), dtype)}
+    return p
+
+
+def qkv_project(params, cfg: ModelConfig, x, positions):
+    """x: [B, S, d] -> q [B,S,H,hd], k,v [B,S,KV,hd] (roped, normed)."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = (x @ params["wq"]).reshape(B, S, cfg.n_heads, hd)
+    kv = (x @ params["wkv"]).reshape(B, S, 2 * cfg.n_kv_heads, hd)
+    k, v = kv[:, :, :cfg.n_kv_heads], kv[:, :, cfg.n_kv_heads:]
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    if cfg.rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Score-level helpers
+# ---------------------------------------------------------------------------
+
+def _mask_bias(q_pos, k_pos, *, causal: bool, window: Optional[int],
+               k_valid=None):
+    """Additive bias [..., Sq, Sk] from absolute positions."""
+    diff = q_pos[..., :, None] - k_pos[..., None, :]
+    ok = jnp.ones(diff.shape, bool)
+    if causal:
+        ok &= diff >= 0
+    if window is not None:
+        ok &= diff < window
+    if k_valid is not None:
+        ok &= k_valid[..., None, :]
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _gqa_scores(q, k, scale):
+    """q: [B,Sq,H,hd], k: [B,Sk,KV,hd] -> [B,H,Sq,Sk] (fp32).
+
+    fp32 accumulation via preferred_element_type — no fp32
+    materialization of the (potentially cache-sized) k operand."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    g = H // KV
+    qg = q.reshape(B, Sq, KV, g, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    return s.reshape(B, KV * g, Sq, -1)
+
+
+def _gqa_values(probs, v):
+    """probs: [B,H,Sq,Sk] fp32, v: [B,Sk,KV,hd] -> [B,Sq,H,hd] fp32."""
+    B, H, Sq, Sk = probs.shape
+    KV = v.shape[2]
+    g = H // KV
+    pg = probs.reshape(B, KV, g, Sq, Sk)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", pg, v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Sq, H, -1)
+
+
+# ---------------------------------------------------------------------------
+# Plain attention (small sequences)
+# ---------------------------------------------------------------------------
+
+def plain_attention(q, k, v, q_pos, k_pos, *, causal, window,
+                    cap: Optional[float], k_valid=None):
+    hd = q.shape[-1]
+    scores = _gqa_scores(q, k, 1.0 / jnp.sqrt(hd).astype(jnp.float32))
+    scores = softcap(scores, cap)
+    bias = _mask_bias(q_pos, k_pos, causal=causal, window=window,
+                      k_valid=k_valid)
+    scores = scores + (bias if bias.ndim == scores.ndim else bias[None, None])
+    probs = jax.nn.softmax(scores, axis=-1)
+    return _gqa_values(probs, v).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked (flash-style) attention
+# ---------------------------------------------------------------------------
+
+def _pad_to(x, axis, mult):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+def chunked_attention(q, k, v, q_pos, k_pos, *, causal, window,
+                      cap: Optional[float], q_chunk=_Q_CHUNK,
+                      k_chunk=_K_CHUNK, k_valid=None):
+    """Blockwise online-softmax attention. Shapes as plain_attention.
+
+    q_pos/k_pos: [S] int32 absolute positions (shared across batch).
+    """
+    B, Sq, H, hd = q.shape
+    out_dtype = q.dtype
+    q_chunk = min(q_chunk, Sq)
+    k_chunk = min(k_chunk, k.shape[1])
+    if k_valid is None:
+        k_valid = jnp.ones((k.shape[1],), bool)
+
+    q, _ = _pad_to(q, 1, q_chunk)
+    q_pos_p, _ = _pad_to(q_pos, 0, q_chunk)
+    k, Sk0 = _pad_to(k, 1, k_chunk)
+    v, _ = _pad_to(v, 1, k_chunk)
+    k_pos_p, _ = _pad_to(k_pos, 0, k_chunk)
+    k_valid_p = jnp.pad(k_valid, (0, k.shape[1] - Sk0))
+
+    nq, nk = q.shape[1] // q_chunk, k.shape[1] // k_chunk
+    KV = k.shape[2]
+    g = H // KV
+    scale = 1.0 / float(hd) ** 0.5
+
+    qb = q.reshape(B, nq, q_chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    qpb = q_pos_p.reshape(nq, q_chunk)
+    kb = k.reshape(B, nk, k_chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nk, k_chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+    kpb = k_pos_p.reshape(nk, k_chunk)
+    kvb = k_valid_p.reshape(nk, k_chunk)
+
+    def q_block(carry, q_in):
+        qi, qp = q_in
+        qg = qi.reshape(B, q_chunk, KV, g, hd).astype(jnp.float32)
+
+        def kv_block(state, k_in):
+            m, l, acc = state
+            ki, vi, kp, kval = k_in
+            s = jnp.einsum("bqkgh,bskh->bkgqs", qg,
+                           ki.astype(jnp.float32)) * scale
+            s = softcap(s, cap)
+            bias = _mask_bias(qp, kp, causal=causal, window=window,
+                              k_valid=kval)          # [q_chunk, k_chunk]
+            s = s + bias[None, None, None]
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", p, vi.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((B, KV, g, q_chunk), NEG_INF, jnp.float32),
+                jnp.zeros((B, KV, g, q_chunk), jnp.float32),
+                jnp.zeros((B, KV, g, q_chunk, hd), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_block, init, (kb, vb, kpb, kvb))
+        o = acc / jnp.maximum(l, 1e-30)[..., None]
+        o = o.transpose(0, 3, 1, 2, 4).reshape(B, q_chunk, H, hd)
+        return carry, o.astype(out_dtype)
+
+    _, ob = jax.lax.scan(q_block, 0, (qb, qpb))
+    out = ob.transpose(1, 0, 2, 3, 4).reshape(B, -1, H, hd)
+    return out[:, :Sq]
+
+
+# ---------------------------------------------------------------------------
+# Top-level dispatch
+# ---------------------------------------------------------------------------
+
+def multihead_attention(q, k, v, q_pos, k_pos, *, causal=True, window=None,
+                        cap=None, k_valid=None, force_impl=None):
+    impl = force_impl or _IMPL
+    Sq, Sk = q.shape[1], k.shape[1]
+    if impl == "pallas" and Sq > 1:
+        from repro.kernels import ops as kernel_ops
+        return kernel_ops.flash_attention(
+            q, k, v, q_pos, k_pos, causal=causal, window=window, cap=cap,
+            k_valid=k_valid)
+    if Sq * Sk <= _CHUNK_THRESHOLD ** 2:
+        return plain_attention(q, k, v, q_pos, k_pos, causal=causal,
+                               window=window, cap=cap, k_valid=k_valid)
+    return chunked_attention(q, k, v, q_pos, k_pos, causal=causal,
+                             window=window, cap=cap, k_valid=k_valid)
+
+
+def attention_block(params, cfg: ModelConfig, spec, x, positions,
+                    k_valid=None):
+    """Full-sequence (train / prefill) attention layer body."""
+    q, k, v = qkv_project(params, cfg, x, positions)
+    window = spec.window
+    out = multihead_attention(
+        q, k, v, positions, positions, causal=cfg.causal, window=window,
+        cap=cfg.attn_softcap, k_valid=k_valid)
+    B, S = x.shape[:2]
+    return out.reshape(B, S, -1) @ params["wo"]

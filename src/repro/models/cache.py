@@ -1,0 +1,104 @@
+"""Decode-time state: KV caches (full + ring-buffer windowed), SSM states,
+RWKV states.  Cache leaves for the scanned layer stack carry a leading
+[R] repeats dim so decode can scan over blocks with per-repeat cache slices.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import Mixer, ModelConfig
+from repro.models import mamba as mamba_mod
+from repro.models import rwkv as rwkv_mod
+
+
+def effective_window(cfg: ModelConfig, spec, long_mode: bool) -> Optional[int]:
+    """Window for an attention layer; long mode caps global layers."""
+    if spec.window is not None:
+        return spec.window
+    if long_mode and cfg.long_mode_window is not None:
+        return cfg.long_mode_window
+    return None
+
+
+def kv_cache_len(cfg: ModelConfig, spec, max_seq: int,
+                 long_mode: bool) -> int:
+    w = effective_window(cfg, spec, long_mode)
+    return min(w, max_seq) if w is not None else max_seq
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, *,
+               long_mode: bool = False, dtype=jnp.bfloat16):
+    """Cache pytree: {"blocks": {"layer{j}": leaves [R, B, ...]}, "pos": i32}."""
+    R = cfg.n_pattern_repeats
+    hd = cfg.resolved_head_dim
+    blocks = {}
+    for j, spec in enumerate(cfg.pattern):
+        if spec.mixer == Mixer.ATTENTION:
+            L = kv_cache_len(cfg, spec, max_seq, long_mode)
+            layer = {
+                "k": jnp.zeros((R, batch, L, cfg.n_kv_heads, hd), dtype),
+                "v": jnp.zeros((R, batch, L, cfg.n_kv_heads, hd), dtype),
+            }
+        elif spec.mixer == Mixer.MAMBA:
+            st = mamba_mod.init_mamba_state(cfg, batch)
+            layer = {k: jnp.broadcast_to(v, (R,) + v.shape)
+                     for k, v in st.items()}
+        elif spec.mixer == Mixer.RWKV6:
+            st = rwkv_mod.init_rwkv_state(cfg, batch)
+            layer = {k: jnp.broadcast_to(v, (R,) + v.shape)
+                     for k, v in st.items()}
+        else:
+            raise ValueError(spec.mixer)
+        if spec.ffn.value == "rwkv_channel":
+            layer["cm_shift"] = jnp.zeros((R, batch, cfg.d_model), dtype)
+        blocks[f"layer{j}"] = layer
+    return {"blocks": blocks, "pos": jnp.zeros((), jnp.int32)}
+
+
+def ring_slot_positions(cache_len: int, window: Optional[int], pos):
+    """Absolute position stored in each cache slot at decode step `pos`.
+
+    Full cache (window None): slot i holds position i (valid if i <= pos).
+    Ring cache: slot i holds the largest p' <= pos with p' % W == i."""
+    idx = jnp.arange(cache_len)
+    if window is None:
+        k_pos = idx
+        valid = idx <= pos
+    else:
+        W = cache_len
+        k_pos = pos - ((pos - idx) % W)
+        valid = k_pos >= 0
+    return k_pos, valid
+
+
+def write_kv(cache_k, cache_v, k_new, v_new, pos, window: Optional[int]):
+    """Write one token's k/v at decode position `pos`.
+
+    cache_k: [B, L, KV, hd]; k_new: [B, 1, KV, hd]."""
+    L = cache_k.shape[1]
+    slot = pos % L if window is not None else jnp.minimum(pos, L - 1)
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, k_new.astype(cache_k.dtype), (0, slot, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v_new.astype(cache_v.dtype), (0, slot, 0, 0))
+    return cache_k, cache_v
+
+
+def prefill_kv(cache_k, cache_v, k, v, window: Optional[int]):
+    """Fill cache from a prefill pass. k: [B, S, KV, hd]."""
+    S = k.shape[1]
+    L = cache_k.shape[1]
+    if window is None or S <= L:
+        n = min(S, L)
+        cache_k = cache_k.at[:, :n].set(k[:, :n].astype(cache_k.dtype))
+        cache_v = cache_v.at[:, :n].set(v[:, :n].astype(cache_v.dtype))
+        return cache_k, cache_v
+    # ring layout: keep last L positions at slot p % L
+    keep = jnp.arange(S - L, S)
+    slots = keep % L
+    cache_k = cache_k.at[:, slots].set(k[:, keep].astype(cache_k.dtype))
+    cache_v = cache_v.at[:, slots].set(v[:, keep].astype(cache_v.dtype))
+    return cache_k, cache_v

@@ -1,0 +1,156 @@
+"""Mamba (selective SSM) mixer — Jamba-style block.
+
+Recurrence: h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * x_t ;
+            y_t = C_t . h_t + D * x_t
+with input-dependent dt, B, C (selectivity).
+
+Training/prefill executes a *chunked* scan: lax.scan over time chunks with
+jax.lax.associative_scan inside each chunk, so the materialized state tensor
+is bounded by [B, chunk, d_inner, d_state].  Decode keeps per-layer
+(conv, ssm) states and performs a single recurrence step.
+
+The Pallas kernel (repro.kernels.mamba_scan) implements the chunk-local scan.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+
+_CHUNK = 64
+
+
+def dt_rank(cfg: ModelConfig) -> int:
+    return max(cfg.d_model // 16, 8)
+
+
+def init_mamba(key, cfg: ModelConfig, dtype):
+    d, di, ds = cfg.d_model, cfg.mamba_d_inner, cfg.mamba_d_state
+    dc, r = cfg.mamba_d_conv, dt_rank(cfg)
+    ks = jax.random.split(key, 6)
+    # S4D-real init for A
+    a = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), dtype=dtype),
+        "conv_w": dense_init(ks[1], (dc, di), dtype=dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], (di, r + 2 * ds), dtype=dtype),
+        "dt_proj": dense_init(ks[3], (r, di), dtype=dtype),
+        "dt_bias": jnp.full((di,), -4.6, dtype),  # softplus^-1(~0.01)
+        "A_log": jnp.log(a).astype(dtype),
+        "D": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[4], (di, d), dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv. x: [B,S,di], w: [dc,di].
+
+    Returns (y, new_state) where state is the trailing dc-1 inputs."""
+    dc = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (dc - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    new_state = xp[:, -(dc - 1):, :] if dc > 1 else None
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(dc)) + b
+    return y, new_state
+
+
+def _ssm_params(params, cfg, u):
+    """u: [B,S,di] -> dt [B,S,di], Bm/Cm [B,S,ds], A [di,ds]."""
+    r, ds = dt_rank(cfg), cfg.mamba_d_state
+    dbc = u @ params["x_proj"]
+    dt = jax.nn.softplus(dbc[..., :r] @ params["dt_proj"]
+                         + params["dt_bias"].astype(jnp.float32))
+    Bm = dbc[..., r:r + ds]
+    Cm = dbc[..., r + ds:]
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    return dt.astype(jnp.float32), Bm, Cm, A
+
+
+def _chunk_scan(dt_c, B_c, x_c, A, h0):
+    """One chunk of the recurrence via associative scan.
+
+    dt_c: [B,c,di], B_c: [B,c,ds], x_c: [B,c,di], h0: [B,di,ds].
+    Returns (ys_h [B,c,di,ds] hidden states, h_end)."""
+    da = jnp.exp(dt_c[..., None] * A)                       # [B,c,di,ds]
+    dbx = (dt_c * x_c)[..., None] * B_c[:, :, None, :]      # [B,c,di,ds]
+    # include h0 by folding it into the first step's additive term
+    dbx = dbx.at[:, 0].add(da[:, 0] * h0)
+
+    def combine(a, b):
+        return a[0] * b[0], b[0] * a[1] + b[1]
+
+    _, hs = jax.lax.associative_scan(combine, (da, dbx), axis=1)
+    return hs, hs[:, -1]
+
+
+def ssm_scan(dt, Bm, Cm, x, A, D, h0, chunk=_CHUNK):
+    """Full selective scan. Shapes: dt,x [B,S,di]; Bm,Cm [B,S,ds].
+
+    Returns (y [B,S,di], h_end [B,di,ds])."""
+    Bsz, S, di = x.shape
+    ds = Bm.shape[-1]
+    pad = (-S) % chunk
+    if pad:
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        x_p = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    else:
+        x_p = x
+    n = (S + pad) // chunk
+    as_chunks = lambda t: t.reshape(Bsz, n, chunk, *t.shape[2:]) \
+        .transpose(1, 0, 2, *range(3, t.ndim + 1))
+
+    def step(h, inputs):
+        dt_c, B_c, C_c, x_c = inputs
+        hs, h_end = _chunk_scan(dt_c.astype(jnp.float32),
+                                B_c.astype(jnp.float32),
+                                x_c.astype(jnp.float32), A, h)
+        y_c = jnp.einsum("bcds,bcs->bcd", hs, C_c.astype(jnp.float32))
+        return h_end, y_c
+
+    h_init = h0 if h0 is not None else jnp.zeros((Bsz, di, ds), jnp.float32)
+    h_end, ys = jax.lax.scan(
+        step, h_init, (as_chunks(dt), as_chunks(Bm), as_chunks(Cm),
+                       as_chunks(x_p)))
+    y = ys.transpose(1, 0, 2, 3).reshape(Bsz, n * chunk, di)[:, :S]
+    y = y + x.astype(jnp.float32) * D
+    return y, h_end
+
+
+def apply_mamba(params, cfg: ModelConfig, x,
+                state: Optional[dict] = None,
+                return_state: bool = False):
+    """x: [B,S,d]. state: {"conv": [B,dc-1,di], "ssm": [B,di,ds]}."""
+    di = cfg.mamba_d_inner
+    xz = x @ params["in_proj"]
+    u, z = xz[..., :di], xz[..., di:]
+    conv_state = state["conv"] if state is not None else None
+    u, new_conv = _causal_conv(u, params["conv_w"], params["conv_b"],
+                               conv_state)
+    u = jax.nn.silu(u)
+    dt, Bm, Cm, A = _ssm_params(params, cfg, u)
+    D = params["D"].astype(jnp.float32)
+    h0 = state["ssm"] if state is not None else None
+    y, h_end = ssm_scan(dt, Bm, Cm, u, A, D, h0,
+                        chunk=min(_CHUNK, x.shape[1]))
+    y = (y.astype(x.dtype) * jax.nn.silu(z)) @ params["out_proj"]
+    if return_state:
+        return y, {"conv": new_conv, "ssm": h_end}
+    return y
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    return {
+        "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, cfg.mamba_d_inner),
+                          dtype),
+        "ssm": jnp.zeros((batch, cfg.mamba_d_inner, cfg.mamba_d_state),
+                         jnp.float32),
+    }

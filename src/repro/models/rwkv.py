@@ -1,0 +1,159 @@
+"""RWKV6 ("Finch") time-mix with data-dependent decay.
+
+Per head (key dim N = head_dim):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          (state: [N, N])
+    y_t = r_t . (diag(u) k_t v_t^T + S_{t-1})
+with per-channel per-token decay w_t in (0,1) produced by a low-rank MLP of
+the token-shifted input (the data-dependent decay that distinguishes RWKV6
+from RWKV5).
+
+Training/prefill uses the chunked linear-attention algorithm: within a chunk
+the quadratic form with cumulative-decay ratios, across chunks a recurrent
+state update — all in log-decay space for numerical stability.  Decode is a
+single recurrence step.
+
+The Pallas kernel (repro.kernels.rwkv6_scan) implements the chunk-local part.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, token_shift
+from repro.parallel.sharding import hint
+
+_CHUNK = 64
+_DECAY_LORA = 64
+
+
+def init_rwkv(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    H, hd = cfg.rwkv_n_heads, cfg.rwkv_head_dim
+    return {
+        "mu": jnp.full((5, d), 0.5, dtype),  # r,k,v,g,w token-shift mixes
+        "w_r": dense_init(ks[0], (d, d), dtype=dtype),
+        "w_k": dense_init(ks[1], (d, d), dtype=dtype),
+        "w_v": dense_init(ks[2], (d, d), dtype=dtype),
+        "w_g": dense_init(ks[3], (d, d), dtype=dtype),
+        "w_o": dense_init(ks[4], (d, d), dtype=dtype),
+        "decay_w1": dense_init(ks[5], (d, _DECAY_LORA), dtype=dtype),
+        "decay_w2": dense_init(ks[6], (_DECAY_LORA, d), dtype=dtype),
+        "decay_base": jnp.full((d,), -6.0, dtype),
+        "bonus_u": dense_init(ks[7], (H, hd), scale=0.5, dtype=dtype),
+        "out_norm": {"scale": jnp.ones((d,), dtype)},
+    }
+
+
+def _project(params, cfg: ModelConfig, x, shifted):
+    """Returns r,k,v,g [B,S,H,hd] and log-decay logw [B,S,H,hd] (<0)."""
+    B, S, d = x.shape
+    H, hd = cfg.rwkv_n_heads, cfg.rwkv_head_dim
+    mu = params["mu"]
+    mix = lambda i: x + (shifted - x) * mu[i]
+    heads = lambda t: t.reshape(B, S, H, hd)
+    r = heads(mix(0) @ params["w_r"])
+    k = heads(mix(1) @ params["w_k"])
+    v = heads(mix(2) @ params["w_v"])
+    g = jax.nn.silu(mix(3) @ params["w_g"])
+    dlora = jnp.tanh(mix(4) @ params["decay_w1"]) @ params["decay_w2"]
+    logw = -jnp.exp(
+        (params["decay_base"] + dlora).astype(jnp.float32))  # [B,S,d] < 0
+    return r, k, v, g, heads(logw)
+
+
+def _chunk_form(r, k, v, logw, u, S0):
+    """One chunk, all heads. r,k,v,logw: [B,c,H,N] fp32; S0: [B,H,N,N].
+
+    Returns (y [B,c,H,N], S_end)."""
+    B, c, H, N = r.shape
+    cum = jnp.cumsum(logw, axis=1)                    # inclusive cumsum
+    cum_ex = cum - logw                               # exclusive
+    total = cum[:, -1]                                # [B,H,N]
+
+    # inter-chunk: y_inter[t] = (r_t * exp(cum_ex_t)) @ S0
+    r_dec = r * jnp.exp(cum_ex)
+    y_inter = jnp.einsum("bchn,bhnm->bchm", r_dec, S0)
+
+    # intra-chunk: scores[t,s] = sum_n r[t,n] k[s,n] exp(cum_ex_t - cum_s)
+    #   valid s < t; diagonal uses the bonus u instead of decay.
+    ratio = cum_ex[:, :, None] - cum[:, None, :]      # [B,t,s,H,N]
+    mask = (jnp.arange(c)[:, None] > jnp.arange(c)[None, :])
+    att = jnp.einsum("bthn,bshn,btshn->btsh",
+                     r, k, jnp.exp(jnp.minimum(ratio, 0.0)))
+    att = att * mask[None, :, :, None]
+    y_intra = jnp.einsum("btsh,bshm->bthm", att, v)
+    diag = jnp.einsum("bthn,hn,bthn->bth", r, u, k)
+    y_intra = y_intra + diag[..., None] * v
+
+    # state update: S_end = diag(exp(total)) S0 + sum_s exp(total-cum_s) k_s v_s^T
+    k_dec = k * jnp.exp(total[:, None] - cum)
+    S_end = jnp.exp(total)[..., None] * S0 + \
+        jnp.einsum("bshn,bshm->bhnm", k_dec, v)
+    return y_inter + y_intra, S_end
+
+
+def rwkv_scan(r, k, v, logw, u, state0, chunk=_CHUNK):
+    """r,k,v,logw: [B,S,H,N]; u: [H,N]; state0: [B,H,N,N] or None."""
+    B, S, H, N = r.shape
+    pad = (-S) % chunk
+    padt = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    if pad:
+        r, k, v, logw = padt(r), padt(k), padt(v), padt(logw)
+    n = (S + pad) // chunk
+    chunks = lambda t: t.reshape(B, n, chunk, H, N).transpose(1, 0, 2, 3, 4)
+    if state0 is None:
+        state0 = jnp.zeros((B, H, N, N), jnp.float32)
+
+    def step(S_c, inp):
+        rc, kc, vc, wc = inp
+        y, S_new = _chunk_form(rc, kc, vc, wc, u, S_c)
+        return S_new, y
+
+    S_end, ys = jax.lax.scan(step, state0,
+                             (chunks(r), chunks(k), chunks(v), chunks(logw)))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, n * chunk, H, N)[:, :S]
+    return y, S_end
+
+
+def apply_rwkv(params, cfg: ModelConfig, x,
+               state: Optional[dict] = None, return_state: bool = False):
+    """x: [B,S,d]. state: {"tm_shift":[B,d], "wkv":[B,H,N,N]}."""
+    B, S, d = x.shape
+    H, N = cfg.rwkv_n_heads, cfg.rwkv_head_dim
+    if state is not None:
+        shifted = jnp.concatenate(
+            [state["tm_shift"][:, None, :].astype(x.dtype), x[:, :-1]], axis=1)
+        wkv0 = state["wkv"]
+    else:
+        shifted = token_shift(x)
+        wkv0 = None
+    r, k, v, g, logw = _project(params, cfg, x, shifted)
+    r = hint(r, "rwkv_heads")
+    k = hint(k, "rwkv_heads")
+    v = hint(v, "rwkv_heads")
+    f32 = lambda t: t.astype(jnp.float32)
+    u = params["bonus_u"].astype(jnp.float32)
+    y, wkv_end = rwkv_scan(f32(r), f32(k), f32(v), logw, u, wkv0,
+                           chunk=min(_CHUNK, S))
+    # per-head group norm
+    mean = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    y = (y - mean) * jax.lax.rsqrt(var + 64e-5)
+    y = y.reshape(B, S, d) * params["out_norm"]["scale"].astype(y.dtype)
+    y = (y.astype(x.dtype) * g) @ params["w_o"]
+    if return_state:
+        return y, {"tm_shift": x[:, -1, :], "wkv": wkv_end}
+    return y
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    H, N = cfg.rwkv_n_heads, cfg.rwkv_head_dim
+    return {
+        "tm_shift": jnp.zeros((batch, cfg.d_model), dtype),
+        "cm_shift": jnp.zeros((batch, cfg.d_model), dtype),
+        "wkv": jnp.zeros((batch, H, N, N), jnp.float32),
+    }

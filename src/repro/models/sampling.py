@@ -1,0 +1,31 @@
+"""Standalone decoding helpers (serving path)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+
+def greedy_decode(params, cfg: ModelConfig, prompts, n_new: int,
+                  long_mode: bool = False):
+    """prompts: [B, P] -> generated tokens [B, n_new] (greedy)."""
+    B, P = prompts.shape
+    out = T.forward(params, cfg, {"tokens": prompts}, return_cache=True,
+                    max_cache_len=P + n_new, remat=False,
+                    long_mode=long_mode)
+    cache = out["cache"]
+    tok = jnp.argmax(out["logits"][:, -1], axis=-1).astype(jnp.int32)
+
+    def step(carry, _):
+        cache, tok = carry
+        logits, cache = T.decode_step(params, cfg, tok[:, None], cache,
+                                      long_mode=long_mode)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return (cache, nxt), tok
+
+    (_, last), toks = jax.lax.scan(step, (cache, tok), None,
+                                   length=n_new - 1)
+    return jnp.concatenate([toks.T, last[:, None]], axis=1) \
+        if n_new > 1 else tok[:, None]

@@ -1,0 +1,277 @@
+"""Model assembly: init, forward (train/prefill), single-token decode.
+
+The layer stack is a lax.scan over `R = n_layers / len(pattern)` repeats of
+the (possibly heterogeneous) pattern super-block, with jax.checkpoint at
+super-block granularity.  Block params are stacked over the leading [R] dim.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.models import attention as attn_mod
+from repro.models import cache as cache_mod
+from repro.models import mamba as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models.config import FFN, Mixer, ModelConfig
+from repro.models.layers import (apply_ffn, embed_features, embed_tokens,
+                                 init_embeddings, init_ffn, init_rmsnorm,
+                                 rmsnorm, sinusoidal_positions, token_shift,
+                                 unembed)
+from repro.parallel.sharding import hint
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ModelConfig, spec) -> Dict[str, Any]:
+    ks = jax.random.split(key, 4)
+    dt = _dtype(cfg)
+    p = {"norm1": init_rmsnorm(cfg.d_model, dt),
+         "norm2": init_rmsnorm(cfg.d_model, dt)}
+    if spec.mixer == Mixer.ATTENTION:
+        p["attn"] = attn_mod.init_attention(ks[0], cfg, dt)
+    elif spec.mixer == Mixer.MAMBA:
+        p["mamba"] = mamba_mod.init_mamba(ks[0], cfg, dt)
+    elif spec.mixer == Mixer.RWKV6:
+        p["rwkv"] = rwkv_mod.init_rwkv(ks[0], cfg, dt)
+    if spec.moe:
+        p["moe"] = moe_mod.init_moe(ks[1], cfg, spec.ffn, dt)
+    else:
+        p["ffn"] = init_ffn(ks[1], cfg, spec.ffn, dt)
+    return p
+
+
+def _init_superblock(key, cfg: ModelConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, len(cfg.pattern))
+    return {f"layer{j}": _init_layer(ks[j], cfg, spec)
+            for j, spec in enumerate(cfg.pattern)}
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    cfg.validate()
+    k_emb, k_blocks = jax.random.split(key)
+    R = cfg.n_pattern_repeats
+    block_keys = jax.random.split(k_blocks, R)
+    blocks = jax.vmap(lambda k: _init_superblock(k, cfg))(block_keys)
+    return {
+        "embed": init_embeddings(k_emb, cfg, _dtype(cfg)),
+        "blocks": blocks,
+        "final_norm": init_rmsnorm(cfg.d_model, _dtype(cfg)),
+    }
+
+
+def count_params(params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Embedding of mixed inputs
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params, cfg: ModelConfig, inputs: Dict[str, Any]):
+    """inputs: {"tokens": [B,S_t]} and/or {"features": [B,S_f,feat]}.
+
+    Features (audio frames / image patches) are prepended to the token
+    embeddings — the modality-frontend carve-out per spec."""
+    parts = []
+    if "features" in inputs and inputs["features"] is not None:
+        parts.append(embed_features(params["embed"], cfg, inputs["features"]))
+    if "tokens" in inputs and inputs["tokens"] is not None:
+        parts.append(embed_tokens(params["embed"], cfg, inputs["tokens"]))
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    if cfg.is_encoder_only:
+        x = x + sinusoidal_positions(x.shape[1], cfg.d_model, x.dtype)[None]
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _layer_forward(p, cfg: ModelConfig, spec, x, positions, *, long_mode,
+                   want_cache, max_cache_len):
+    """Returns (x, aux, cache_entry_or_None)."""
+    aux = jnp.zeros((), jnp.float32)
+    entry = None
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if spec.mixer == Mixer.ATTENTION:
+        window = cache_mod.effective_window(cfg, spec, long_mode)
+        q, k, v = attn_mod.qkv_project(p["attn"], cfg, h, positions)
+        q = hint(q, "attn_q")
+        k = hint(k, "attn_kv")
+        y = attn_mod.multihead_attention(
+            q, k, v, positions, positions, causal=cfg.causal, window=window,
+            cap=cfg.attn_softcap)
+        B, S = h.shape[:2]
+        y = y.reshape(B, S, -1) @ p["attn"]["wo"]
+        if want_cache:
+            L = cache_mod.kv_cache_len(cfg, spec, max_cache_len, long_mode)
+            hd = cfg.resolved_head_dim
+            ck = jnp.zeros((B, L, cfg.n_kv_heads, hd), _dtype(cfg))
+            cv = jnp.zeros_like(ck)
+            ck, cv = cache_mod.prefill_kv(ck, cv, k, v, window)
+            entry = {"k": ck, "v": cv}
+    elif spec.mixer == Mixer.MAMBA:
+        if want_cache:
+            y, st = mamba_mod.apply_mamba(p["mamba"], cfg, h,
+                                          return_state=True)
+            entry = st
+        else:
+            y = mamba_mod.apply_mamba(p["mamba"], cfg, h)
+    elif spec.mixer == Mixer.RWKV6:
+        if want_cache:
+            y, st = rwkv_mod.apply_rwkv(p["rwkv"], cfg, h, return_state=True)
+            entry = st
+        else:
+            y = rwkv_mod.apply_rwkv(p["rwkv"], cfg, h)
+    else:
+        raise ValueError(spec.mixer)
+    # name the mixer output so the remat policy can save it: recomputing
+    # attention/SSM scans in the backward pass doubles their HBM traffic
+    # (§Perf jamba iteration)
+    y = checkpoint_name(y, "mixer_out")
+    x = hint(x + y, "residual")
+
+    h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+    if spec.moe:
+        y, a = moe_mod.apply_moe(p["moe"], cfg, spec.ffn, h)
+        aux = aux + a
+    else:
+        shifted = token_shift(h) if spec.ffn == FFN.RWKV_CHANNEL else None
+        y = apply_ffn(p["ffn"], cfg, spec.ffn, h, shifted=shifted)
+        if want_cache and spec.ffn == FFN.RWKV_CHANNEL:
+            entry = dict(entry or {})
+            entry["cm_shift"] = h[:, -1, :]
+    x = hint(x + y, "residual")
+    return x, aux, entry
+
+
+def forward(params, cfg: ModelConfig, inputs: Dict[str, Any], *,
+            long_mode: bool = False, return_cache: bool = False,
+            max_cache_len: Optional[int] = None, remat: bool = True,
+            remat_policy: str = "save_mixer"):
+    """Full-sequence forward. Returns dict with logits [B,S,V], aux_loss,
+    and (optionally) a decode cache primed with the sequence."""
+    x = embed_inputs(params, cfg, inputs)
+    B, S, _ = x.shape
+    positions = jnp.arange(S)
+    x = hint(x, "residual")
+    max_cache_len = max_cache_len or S
+
+    def superblock(x, block_params):
+        aux = jnp.zeros((), jnp.float32)
+        entries = {}
+        for j, spec in enumerate(cfg.pattern):
+            x, a, entry = _layer_forward(
+                block_params[f"layer{j}"], cfg, spec, x, positions,
+                long_mode=long_mode, want_cache=return_cache,
+                max_cache_len=max_cache_len)
+            aux = aux + a
+            if entry is not None:
+                entries[f"layer{j}"] = entry
+        return x, (aux, entries)
+
+    if remat and remat_policy == "save_mixer":
+        policy = jax.checkpoint_policies.save_only_these_names("mixer_out")
+        block_fn = jax.checkpoint(superblock, policy=policy)
+    elif remat:
+        block_fn = jax.checkpoint(superblock)
+    else:
+        block_fn = superblock
+
+    def scan_body(x, bp):
+        x, out = block_fn(x, bp)
+        return x, out
+
+    x, (auxes, entries) = jax.lax.scan(scan_body, x, params["blocks"])
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = hint(unembed(params["embed"], cfg, x), "logits")
+    out = {"logits": logits, "aux_loss": jnp.sum(auxes), "hidden": x}
+    if return_cache:
+        cache = {"blocks": entries, "pos": jnp.asarray(S, jnp.int32)}
+        out["cache"] = cache
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token, serve_step)
+# ---------------------------------------------------------------------------
+
+def _layer_decode(p, cfg: ModelConfig, spec, x, cache_entry, pos, *,
+                  long_mode):
+    """x: [B,1,d]. Returns (x, new_cache_entry)."""
+    new_entry = {}
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if spec.mixer == Mixer.ATTENTION:
+        window = cache_mod.effective_window(cfg, spec, long_mode)
+        q, k, v = attn_mod.qkv_project(p["attn"], cfg, h,
+                                       jnp.full((1,), pos, jnp.int32))
+        ck, cv = cache_mod.write_kv(cache_entry["k"], cache_entry["v"],
+                                    k, v, pos, window)
+        new_entry.update(k=ck, v=cv)
+        L = ck.shape[1]
+        k_pos, valid = cache_mod.ring_slot_positions(L, window, pos)
+        y = attn_mod.multihead_attention(
+            q, ck, cv, jnp.full((1,), pos, jnp.int32), k_pos,
+            causal=True, window=window, cap=cfg.attn_softcap, k_valid=valid)
+        y = y.reshape(x.shape[0], 1, -1) @ p["attn"]["wo"]
+    elif spec.mixer == Mixer.MAMBA:
+        st = {k: cache_entry[k] for k in ("conv", "ssm")}
+        y, st_new = mamba_mod.apply_mamba(p["mamba"], cfg, h, state=st,
+                                          return_state=True)
+        new_entry.update(st_new)
+    elif spec.mixer == Mixer.RWKV6:
+        st = {"tm_shift": cache_entry["tm_shift"], "wkv": cache_entry["wkv"]}
+        y, st_new = rwkv_mod.apply_rwkv(p["rwkv"], cfg, h, state=st,
+                                        return_state=True)
+        new_entry.update(st_new)
+    x = x + y
+
+    h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+    if spec.moe:
+        y, _ = moe_mod.apply_moe(p["moe"], cfg, spec.ffn, h)
+    else:
+        if spec.ffn == FFN.RWKV_CHANNEL:
+            shifted = cache_entry["cm_shift"][:, None, :].astype(h.dtype)
+            y = apply_ffn(p["ffn"], cfg, spec.ffn, h, shifted=shifted)
+            new_entry["cm_shift"] = h[:, -1, :]
+        else:
+            y = apply_ffn(p["ffn"], cfg, spec.ffn, h)
+    return x + y, new_entry
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, *,
+                long_mode: bool = False):
+    """tokens: [B, 1] int32. Returns (logits [B, V], new_cache)."""
+    assert not cfg.is_encoder_only, "encoder-only models have no decode step"
+    pos = cache["pos"]
+    x = embed_tokens(params["embed"], cfg, tokens)
+    x = hint(x, "decode_residual")
+
+    def scan_body(x, inp):
+        bp, centry = inp
+        new_entries = {}
+        for j, spec in enumerate(cfg.pattern):
+            x, ne = _layer_decode(bp[f"layer{j}"], cfg, spec, x,
+                                  centry[f"layer{j}"], pos,
+                                  long_mode=long_mode)
+            new_entries[f"layer{j}"] = ne
+        return x, new_entries
+
+    x, new_blocks = jax.lax.scan(scan_body, x,
+                                 (params["blocks"], cache["blocks"]))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], cfg, x)[:, 0]
+    new_cache = {"blocks": new_blocks, "pos": pos + 1}
+    return logits, new_cache

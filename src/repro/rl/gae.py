@@ -1,0 +1,51 @@
+"""Advantage estimation: GAE (PPO, Schulman et al. 2016) and
+group-relative advantages (GRPO, Shao et al. 2024).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gae_advantages(rewards, values, mask, *, gamma: float = 1.0,
+                   lam: float = 0.95):
+    """rewards, values, mask: [B, T] (mask 0 after EOS).
+
+    values[:, t] = V(s_t); bootstrap value after the last step is 0.
+    Returns (advantages [B, T], returns [B, T])."""
+    B, T = rewards.shape
+    values_next = jnp.concatenate(
+        [values[:, 1:], jnp.zeros((B, 1), values.dtype)], axis=1)
+    deltas = rewards + gamma * values_next * mask - values
+
+    def step(carry, xs):
+        delta_t, mask_t = xs
+        carry = delta_t + gamma * lam * mask_t * carry
+        return carry, carry
+
+    _, adv_rev = jax.lax.scan(
+        step, jnp.zeros((B,), rewards.dtype),
+        (deltas.T[::-1], mask.T[::-1]))
+    adv = adv_rev[::-1].T * mask
+    returns = adv + values * mask
+    return adv, returns
+
+
+def grpo_advantages(rewards, group_size: int, mask):
+    """rewards: [B] sequence-level; groups of `group_size` share a prompt.
+
+    A_i = (r_i - mean_group) / (std_group + eps), broadcast over tokens."""
+    B = rewards.shape[0]
+    g = rewards.reshape(B // group_size, group_size)
+    mean = g.mean(axis=1, keepdims=True)
+    std = g.std(axis=1, keepdims=True)
+    adv = ((g - mean) / (std + 1e-4)).reshape(B)
+    return adv[:, None] * mask
+
+
+def whiten(adv, mask):
+    """Normalize advantages over valid tokens (standard PPO trick)."""
+    n = jnp.maximum(mask.sum(), 1.0)
+    mean = (adv * mask).sum() / n
+    var = (jnp.square(adv - mean) * mask).sum() / n
+    return (adv - mean) * jax.lax.rsqrt(var + 1e-8) * mask

@@ -1,0 +1,59 @@
+"""PPO / GRPO objectives (paper §3.3 PPO formulation)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def ppo_policy_loss(logp_new, logp_old, advantages, mask, *,
+                    clip_eps: float = 0.2) -> Dict[str, jnp.ndarray]:
+    """Clipped surrogate. All inputs [B, T] (per generated token)."""
+    ratio = jnp.exp(logp_new - logp_old)
+    unclipped = ratio * advantages
+    clipped = jnp.clip(ratio, 1 - clip_eps, 1 + clip_eps) * advantages
+    per_tok = -jnp.minimum(unclipped, clipped)
+    n = jnp.maximum(mask.sum(), 1.0)
+    loss = (per_tok * mask).sum() / n
+    clip_frac = ((jnp.abs(ratio - 1) > clip_eps) * mask).sum() / n
+    approx_kl = ((logp_old - logp_new) * mask).sum() / n
+    return {"loss": loss, "clip_frac": clip_frac, "approx_kl": approx_kl,
+            "ratio_mean": (ratio * mask).sum() / n}
+
+
+def value_loss(values_new, values_old, returns, mask, *,
+               clip_eps: float = 0.2):
+    """Clipped value loss (PPO2 style). [B, T]."""
+    v_clip = values_old + jnp.clip(values_new - values_old,
+                                   -clip_eps, clip_eps)
+    l1 = jnp.square(values_new - returns)
+    l2 = jnp.square(v_clip - returns)
+    n = jnp.maximum(mask.sum(), 1.0)
+    return 0.5 * (jnp.maximum(l1, l2) * mask).sum() / n
+
+
+def entropy_bonus(logits, mask):
+    """Mean token entropy over valid positions. logits [B, T, V]."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ent = -(jnp.exp(logp) * logp).sum(-1)
+    n = jnp.maximum(mask.sum(), 1.0)
+    return (ent * mask).sum() / n
+
+
+def kl_penalised_rewards(score, logp_actor, logp_ref, mask, *,
+                         kl_beta: float = 0.02):
+    """Token-level rewards: sequence score at the last valid token minus
+    per-token KL penalty (paper's r_tau formulation)."""
+    kl = logp_actor - logp_ref
+    rewards = -kl_beta * kl * mask
+    # add the scalar score at each sequence's final valid position
+    last = jnp.maximum(mask.sum(axis=1).astype(jnp.int32) - 1, 0)
+    rewards = rewards.at[jnp.arange(rewards.shape[0]), last].add(score)
+    return rewards, (kl * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def gather_logprobs(logits, tokens):
+    """log p(tokens) under logits. logits [B,T,V], tokens [B,T]."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return jnp.take_along_axis(logp, tokens[..., None], axis=-1)[..., 0]

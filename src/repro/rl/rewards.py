@@ -1,0 +1,41 @@
+"""Reward computation: programmatic verifier (the runnable example's path)
+and a learned reward-model head (separate LLM + scalar head, frozen during
+RL, as in the paper's PPO workflow)."""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+
+
+def init_reward_head(key, cfg: ModelConfig, dtype=jnp.float32):
+    return {"w": dense_init(key, (cfg.d_model, 1), dtype=dtype)}
+
+
+def reward_model_scores(params, head, cfg: ModelConfig, sequences, mask_last):
+    """Scalar score per sequence = head(last hidden state).
+
+    sequences: [B, S]; mask_last: [B] index of final valid token."""
+    out = T.forward(params, cfg, {"tokens": sequences}, remat=False)
+    h = out["hidden"]                                   # [B, S, d]
+    idx = mask_last[:, None, None]
+    last_h = jnp.take_along_axis(
+        h, jnp.broadcast_to(idx, (h.shape[0], 1, h.shape[2])), axis=1)[:, 0]
+    return (last_h @ head["w"])[:, 0].astype(jnp.float32)
+
+
+def init_value_head(key, cfg: ModelConfig, dtype=jnp.float32):
+    return {"w": dense_init(key, (cfg.d_model, 1), dtype=dtype)}
+
+
+def critic_values(params, head, cfg: ModelConfig, sequences, gen_start: int):
+    """Per-generated-token values V(s_t). Returns [B, S - gen_start]."""
+    out = T.forward(params, cfg, {"tokens": sequences}, remat=False)
+    h = out["hidden"][:, gen_start - 1:-1]  # state BEFORE each gen token
+    return (h @ head["w"])[..., 0].astype(jnp.float32)

@@ -1,0 +1,83 @@
+"""Actor generation: autoregressive sampling with KV cache.
+
+Prefill the prompt once (forward with return_cache), then lax.scan over
+decode steps.  Returns sequences, per-token logprobs and the validity mask
+(positions after EOS are masked out).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    max_new_tokens: int = 16
+    temperature: float = 1.0
+    eos_token: Optional[int] = None
+    greedy: bool = False
+
+
+def _sample(rng, logits, cfg: SamplerConfig):
+    if cfg.greedy or cfg.temperature <= 0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        rng, logits.astype(jnp.float32) / cfg.temperature, axis=-1) \
+        .astype(jnp.int32)
+
+
+def generate(params, cfg: ModelConfig, prompts, rng,
+             sampler: SamplerConfig) -> Dict[str, jnp.ndarray]:
+    """prompts: [B, P] int32.  Returns dict with
+    sequences [B, P+N], gen_tokens [B, N], logprobs [B, N], mask [B, N]."""
+    B, P = prompts.shape
+    N = sampler.max_new_tokens
+    out = T.forward(params, cfg, {"tokens": prompts}, return_cache=True,
+                    max_cache_len=P + N, remat=False)
+    cache = out["cache"]
+    logits0 = out["logits"][:, -1]
+
+    rngs = jax.random.split(rng, N)
+    tok0 = _sample(rngs[0], logits0, sampler)
+    logp0 = jax.nn.log_softmax(logits0.astype(jnp.float32), axis=-1)
+    lp0 = jnp.take_along_axis(logp0, tok0[:, None], axis=-1)[:, 0]
+
+    def step(carry, rng_t):
+        cache, tok, alive = carry
+        logits, cache = T.decode_step(params, cfg, tok[:, None], cache)
+        nxt = _sample(rng_t, logits, sampler)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        lp = jnp.take_along_axis(logp, nxt[:, None], axis=-1)[:, 0]
+        if sampler.eos_token is not None:
+            alive_next = alive & (tok != sampler.eos_token)
+        else:
+            alive_next = alive
+        return (cache, nxt, alive_next), (nxt, lp, alive_next)
+
+    alive0 = jnp.ones((B,), bool)
+    (_, _, _), (toks, lps, alives) = jax.lax.scan(
+        step, (cache, tok0, alive0), rngs[1:])
+    gen = jnp.concatenate([tok0[:, None], toks.T], axis=1)       # [B, N]
+    logprobs = jnp.concatenate([lp0[:, None], lps.T], axis=1)
+    mask = jnp.concatenate([jnp.ones((B, 1), bool), alives.T], axis=1)
+    sequences = jnp.concatenate([prompts, gen], axis=1)
+    return {"sequences": sequences, "gen_tokens": gen,
+            "logprobs": logprobs, "mask": mask.astype(jnp.float32)}
+
+
+def sequence_logprobs(params, cfg: ModelConfig, sequences, gen_start: int):
+    """Teacher-forced logprobs of the generated part. sequences [B, S].
+
+    Returns logprobs [B, S - gen_start] for tokens at positions
+    gen_start..S-1 (each predicted from the previous position)."""
+    out = T.forward(params, cfg, {"tokens": sequences}, remat=False)
+    logits = out["logits"][:, gen_start - 1:-1]
+    targets = sequences[:, gen_start:]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0], out

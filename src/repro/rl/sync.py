@@ -1,0 +1,27 @@
+"""Weight resharding / synchronization between training and generation
+replicas (the C_reshard / C_sync terms of the cost model).
+
+On the single-host runtime this is a device_put (identity layout); under a
+mesh the target sharding comes from the generation task's plan.  Transfer
+volume is returned so the driver can account the synchronization cost."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(tree))
+
+
+def sync_weights(train_params, target_shardings=None) -> Tuple[object, int]:
+    """Returns (generation_params, bytes_transferred)."""
+    nbytes = tree_bytes(train_params)
+    if target_shardings is None:
+        gen = train_params  # same devices: zero-copy handoff
+    else:
+        gen = jax.device_put(train_params, target_shardings)
+    return gen, nbytes

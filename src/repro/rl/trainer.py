@@ -1,0 +1,227 @@
+"""RL trainers: synchronous PPO (6 tasks) and GRPO (4 tasks).
+
+The iteration structure mirrors the paper's workflow graph exactly:
+  actor_generation -> {reward, reference, critic} inference ->
+  {actor, critic} training -> weight reshard/sync.
+On a single host the tasks execute sequentially; the execution plan from
+the scheduler (when provided) annotates which devices/submeshes each task
+would occupy, and the weight-sync step goes through rl.sync so the
+transfer volume is accounted.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import AdditionTask, EOS
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.optim import adam
+from repro.rl import gae, losses, rewards as rewards_mod, rollout
+from repro.rl.sync import sync_weights
+
+
+@dataclasses.dataclass(frozen=True)
+class RLConfig:
+    algorithm: str = "grpo"          # "ppo" | "grpo"
+    clip_eps: float = 0.2
+    kl_beta: float = 0.02
+    gamma: float = 1.0
+    lam: float = 0.95
+    value_coef: float = 0.5
+    entropy_coef: float = 0.0
+    n_rollouts: int = 4              # responses per prompt (GRPO group)
+    max_new_tokens: int = 8
+    temperature: float = 1.0
+    whiten_advantages: bool = True
+    lr: float = 1e-4
+    # asynchronous (one-step off-policy) RL: generation for iteration t+1
+    # overlaps training on iteration t's rollouts (§2.1); the PPO ratio
+    # absorbs the one-step staleness of logp_old
+    asynchronous: bool = False
+
+
+class RLTrainer:
+    def __init__(self, model_cfg: ModelConfig, rl_cfg: RLConfig,
+                 task: AdditionTask, key, plan=None):
+        self.cfg = model_cfg
+        self.rl = rl_cfg
+        self.task = task
+        self.plan = plan
+        k_actor, k_critic, k_vh = jax.random.split(key, 3)
+        self.actor = T.init_params(k_actor, model_cfg)
+        self.ref = jax.tree_util.tree_map(jnp.copy, self.actor)
+        self.actor_opt = adam.init_adam_state(
+            self.actor, adam.AdamConfig(lr=rl_cfg.lr))
+        self.gen_params = self.actor  # generation replica (synced weights)
+        self.sync_bytes = 0
+        if rl_cfg.algorithm == "ppo":
+            self.critic = T.init_params(k_critic, model_cfg)
+            self.value_head = rewards_mod.init_value_head(k_vh, model_cfg)
+            self.critic_opt = adam.init_adam_state(
+                (self.critic, self.value_head),
+                adam.AdamConfig(lr=rl_cfg.lr))
+        self.sampler = rollout.SamplerConfig(
+            max_new_tokens=rl_cfg.max_new_tokens,
+            temperature=rl_cfg.temperature, eos_token=EOS)
+        self._jit()
+
+    # ------------------------------------------------------------------
+    def _jit(self):
+        cfg, rl = self.cfg, self.rl
+
+        self._generate = jax.jit(functools.partial(
+            rollout.generate, cfg=cfg, sampler=self.sampler),
+            static_argnames=())
+
+        def ref_logp(params, sequences, gen_start):
+            lp, _ = rollout.sequence_logprobs(params, cfg, sequences,
+                                              gen_start)
+            return lp
+        self._ref_logp = jax.jit(ref_logp, static_argnames=("gen_start",))
+
+        def actor_loss(params, batch, gen_start):
+            lp_new, out = rollout.sequence_logprobs(
+                params, cfg, batch["sequences"], gen_start)
+            pl = losses.ppo_policy_loss(
+                lp_new, batch["logp_old"], batch["advantages"],
+                batch["mask"], clip_eps=rl.clip_eps)
+            loss = pl["loss"] + out["aux_loss"]
+            if rl.entropy_coef:
+                logits = out["logits"][:, gen_start - 1:-1]
+                loss = loss - rl.entropy_coef * losses.entropy_bonus(
+                    logits, batch["mask"])
+            return loss, pl
+
+        def actor_step(params, opt_state, batch, gen_start):
+            (loss, pl), grads = jax.value_and_grad(
+                actor_loss, has_aux=True)(params, batch, gen_start)
+            new_params, new_opt, om = adam.adam_update(
+                params, grads, opt_state, adam.AdamConfig(lr=rl.lr))
+            return new_params, new_opt, {**pl, "loss": loss, **om}
+        self._actor_step = jax.jit(actor_step,
+                                   static_argnames=("gen_start",))
+
+        if rl.algorithm == "ppo":
+            def critic_vals(critic, head, sequences, gen_start):
+                return rewards_mod.critic_values(critic, head, cfg,
+                                                 sequences, gen_start)
+            self._critic_vals = jax.jit(critic_vals,
+                                        static_argnames=("gen_start",))
+
+            def critic_loss(cp, batch, gen_start):
+                critic, head = cp
+                v = rewards_mod.critic_values(critic, head, cfg,
+                                              batch["sequences"], gen_start)
+                return rl.value_coef * losses.value_loss(
+                    v, batch["values_old"], batch["returns"], batch["mask"],
+                    clip_eps=rl.clip_eps)
+
+            def critic_step(cp, opt_state, batch, gen_start):
+                loss, grads = jax.value_and_grad(critic_loss)(
+                    cp, batch, gen_start)
+                new_cp, new_opt, _ = adam.adam_update(
+                    cp, grads, opt_state, adam.AdamConfig(lr=rl.lr))
+                return new_cp, new_opt, loss
+            self._critic_step = jax.jit(critic_step,
+                                        static_argnames=("gen_start",))
+
+    # ------------------------------------------------------------------
+    def iteration(self, prompts: np.ndarray, answers: np.ndarray,
+                  rng) -> Dict[str, float]:
+        """One RL iteration over a prompt batch.
+
+        Synchronous: generate -> infer -> train -> sync (iteration-level
+        barrier).  Asynchronous: generate with the PREVIOUS sync's weights
+        while training on the PREVIOUS iteration's rollouts (one-step
+        off-policy); the first call only produces rollouts."""
+        rl = self.rl
+        G = rl.n_rollouts
+        prompts_rep = np.repeat(prompts, G, axis=0)
+        answers_rep = np.repeat(answers, G, axis=0)
+        P = prompts.shape[1]
+
+        # --- task 1: actor generation (on the generation replica) ---
+        ro = self._generate(self.gen_params,
+                            prompts=jnp.asarray(prompts_rep), rng=rng)
+        if rl.asynchronous:
+            pending = getattr(self, "_pending", None)
+            self._pending = (ro, answers_rep, P)
+            if pending is None:
+                # pipeline fill: nothing to train on yet
+                return {"reward_mean": 0.0, "kl": 0.0, "gen_len": 0.0,
+                        "loss": 0.0, "pipeline_fill": 1.0, "sync_gb": 0.0}
+            ro, answers_rep, P = pending
+        sequences = ro["sequences"]
+        mask = ro["mask"]
+
+        # --- task 2: reward inference (programmatic verifier) ---
+        gen_np = np.asarray(ro["gen_tokens"])
+        scores = self.task.reward_batch(answers_rep, gen_np)
+
+        # --- task 3: reference inference ---
+        lp_ref = self._ref_logp(self.ref, sequences, gen_start=P)
+
+        # --- KL-penalised token rewards ---
+        tok_rewards, kl = losses.kl_penalised_rewards(
+            jnp.asarray(scores), ro["logprobs"], lp_ref, mask,
+            kl_beta=rl.kl_beta)
+
+        metrics: Dict[str, float] = {
+            "reward_mean": float(scores.mean()),
+            "kl": float(kl),
+            "gen_len": float(np.asarray(mask).sum(1).mean()),
+        }
+
+        # --- advantages ---
+        if rl.algorithm == "ppo":
+            # task 4: critic inference
+            values = self._critic_vals(self.critic, self.value_head,
+                                       sequences, gen_start=P)
+            adv, returns = gae.gae_advantages(
+                tok_rewards, values * mask, mask,
+                gamma=rl.gamma, lam=rl.lam)
+        else:
+            seq_reward = np.asarray(tok_rewards).sum(1)
+            adv = gae.grpo_advantages(jnp.asarray(seq_reward), G, mask)
+            returns = values = None
+        if rl.whiten_advantages:
+            adv = gae.whiten(adv, mask)
+
+        batch = {"sequences": sequences, "logp_old": ro["logprobs"],
+                 "advantages": adv, "mask": mask}
+
+        # --- task 5: actor training ---
+        self.actor, self.actor_opt, am = self._actor_step(
+            self.actor, self.actor_opt, batch, gen_start=P)
+        metrics.update({k: float(v) for k, v in am.items()})
+
+        # --- task 6: critic training (PPO only) ---
+        if rl.algorithm == "ppo":
+            cbatch = dict(batch, values_old=values * mask, returns=returns)
+            (self.critic, self.value_head), self.critic_opt, closs = \
+                self._critic_step((self.critic, self.value_head),
+                                  self.critic_opt, cbatch, gen_start=P)
+            metrics["critic_loss"] = float(closs)
+
+        # --- weight reshard/sync: training replica -> generation replica ---
+        self.gen_params, nbytes = sync_weights(self.actor)
+        self.sync_bytes += nbytes
+        metrics["sync_gb"] = nbytes / 1e9
+        return metrics
+
+    # ------------------------------------------------------------------
+    def evaluate(self, prompts: np.ndarray, answers: np.ndarray,
+                 rng) -> float:
+        sampler = dataclasses.replace(self.sampler, greedy=True)
+        ro = rollout.generate(self.gen_params, self.cfg,
+                              jnp.asarray(prompts), rng, sampler)
+        gen_np = np.asarray(ro["gen_tokens"])
+        exact = [self.task.reward(a, g) >= 1.0
+                 for a, g in zip(answers, gen_np)]
+        return float(np.mean(exact))

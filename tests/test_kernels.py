@@ -1,0 +1,119 @@
+"""Per-kernel shape/dtype sweeps: assert_allclose vs the ref.py oracles
+(interpret mode executes the kernel body in Python on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.mamba_scan.ops import mamba_scan
+from repro.kernels.mamba_scan.ref import mamba_scan_ref
+from repro.kernels.rwkv6_scan.ops import rwkv6_scan
+from repro.kernels.rwkv6_scan.ref import rwkv6_scan_ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("B,S,H,KV,hd", [
+    (2, 256, 4, 2, 64),
+    (1, 128, 4, 4, 80),     # hd padding path (hubert-style)
+    (2, 300, 8, 2, 128),    # seq padding path
+    (1, 96, 2, 1, 64),      # MQA
+])
+@pytest.mark.parametrize("causal,window,cap", [
+    (True, None, None), (True, 64, None), (True, None, 50.0),
+    (False, None, None),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(B, S, H, KV, hd, causal, window, cap, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window, cap=cap)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=window, cap=cap)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("B,H,KV,hd,L", [
+    (2, 4, 2, 64, 300), (1, 8, 8, 80, 512), (3, 4, 1, 128, 1000),
+])
+@pytest.mark.parametrize("cap", [None, 30.0])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(B, H, KV, hd, L, cap, dtype):
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, L, KV, hd), dtype)
+    v = jax.random.normal(ks[2], (B, L, KV, hd), dtype)
+    valid = jax.random.bernoulli(ks[3], 0.75, (B, L))
+    bias = jnp.where(valid, 0.0, -1e30).astype(jnp.float32)
+    out = decode_attention(q, k, v, bias, cap=cap)
+    ref = decode_attention_ref(q, k, v, bias, cap=cap)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("B,S,H,N,chunk", [
+    (2, 128, 2, 32, 32), (1, 100, 4, 64, 64),   # padding path
+    (2, 64, 1, 16, 16), (1, 64, 2, 128, 32),
+])
+def test_rwkv6_scan(B, S, H, N, chunk):
+    ks = jax.random.split(KEY, 5)
+    r = jax.random.normal(ks[0], (B, S, H, N))
+    k = jax.random.normal(ks[1], (B, S, H, N))
+    v = jax.random.normal(ks[2], (B, S, H, N))
+    logw = -jnp.exp(jax.random.normal(ks[3], (B, S, H, N)) * 0.5 - 1.0)
+    u = jax.random.normal(ks[4], (H, N)) * 0.5
+    y, st = rwkv6_scan(r, k, v, logw, u, chunk=chunk)
+    yr, sr = rwkv6_scan_ref(r, k, v, logw, u)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(sr),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("B,S,di,ds,chunk,bd", [
+    (2, 64, 128, 16, 16, 64), (1, 100, 512, 16, 32, 256),  # padding
+    (2, 32, 64, 8, 32, 64), (1, 48, 320, 16, 16, 64),      # di padding
+])
+def test_mamba_scan(B, S, di, ds, chunk, bd):
+    ks = jax.random.split(KEY, 5)
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (B, S, di)) - 1)
+    x = jax.random.normal(ks[1], (B, S, di))
+    Bm = jax.random.normal(ks[2], (B, S, ds))
+    Cm = jax.random.normal(ks[3], (B, S, ds))
+    A = -jnp.exp(jax.random.normal(ks[4], (di, ds)) * 0.3)
+    y, h = mamba_scan(dt, x, Bm, Cm, A, chunk=chunk, bd=bd)
+    yr, hr = mamba_scan_ref(dt, x, Bm, Cm, A)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_pallas_path_in_model_attention():
+    """set_attention_impl('pallas') must agree with the jnp path."""
+    from repro.models import attention as attn
+    ks = jax.random.split(KEY, 3)
+    B, S, H, KV, hd = 1, 128, 4, 2, 64
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    pos = jnp.arange(S)
+    jnp_out = attn.multihead_attention(q, k, v, pos, pos, causal=True)
+    try:
+        attn.set_attention_impl("pallas")
+        pallas_out = attn.multihead_attention(q, k, v, pos, pos, causal=True)
+    finally:
+        attn.set_attention_impl("jnp")
+    np.testing.assert_allclose(np.asarray(jnp_out), np.asarray(pallas_out),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,127 @@
+"""Hypothesis property-based tests on system invariants."""
+import hypothesis as hp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import enumerate as enum_mod, topology, workflow
+from repro.core.costmodel import CostModel, ring_cost
+from repro.core.plan import check_constraints
+from repro.optim import adam
+from repro.parallel.sharding import sanitize_spec
+from repro.rl import gae
+
+hp.settings.register_profile("ci", deadline=None, max_examples=25)
+hp.settings.load_profile("ci")
+
+
+@hp.given(st.integers(1, 7))
+def test_set_partitions_are_partitions(n):
+    parts = enum_mod.set_partitions(range(n))
+    seen = set()
+    for p in parts:
+        assert p not in seen
+        seen.add(p)
+        flat = sorted(x for b in p for x in b)
+        assert flat == list(range(n))
+
+
+@hp.given(st.integers(2, 6), st.integers(6, 64))
+def test_proportional_sizes_cover(n_groups, n_devices):
+    hp.assume(n_devices >= n_groups)
+    wf = workflow.make_ppo(workflow.QWEN_4B)
+    groupings = [g for g in enum_mod.task_groupings(wf)
+                 if len(g) == n_groups]
+    hp.assume(groupings)
+    sizes = enum_mod.proportional_sizes(wf, groupings[0], n_devices)
+    assert sum(sizes) == n_devices
+    assert all(s >= 1 for s in sizes)
+
+
+@hp.given(st.lists(st.integers(1, 500), min_size=1, max_size=4),
+          st.lists(st.sampled_from([None, "data", "model",
+                                    ("data", "model")]),
+                   min_size=0, max_size=4))
+def test_sanitize_spec_always_divisible(shape, entries):
+    mesh_sizes = {"data": 16, "model": 16}
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+
+        class devices:
+            shape = (16, 16)
+    spec = sanitize_spec(P(*entries), tuple(shape), FakeMesh)
+    for d, entry in enumerate(list(spec)[:len(shape)]):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        prod = 1
+        for a in axes:
+            prod *= mesh_sizes[a]
+        assert shape[d] % prod == 0
+
+
+@hp.given(st.integers(2, 8), st.floats(1e3, 1e12))
+def test_ring_cost_positive_and_bounded(n, cv):
+    topo = topology.build_testbed("single_region",
+                                  counts={"A100": 8})
+    devs = list(range(n))
+    c = ring_cost(topo, devs, cv)
+    assert c >= 0
+    # bounded below by best single edge, above by worst edge cost * 1
+    worst = max(topo.alpha(a, b) + cv / (topo.beta(a, b) * 1e9)
+                for a in devs for b in devs if a != b)
+    assert c <= worst + 1e-9
+
+
+@hp.given(st.integers(0, 10_000))
+def test_adam_lr_schedule_bounds(step):
+    cfg = adam.AdamConfig(lr=1e-3, warmup_steps=100, total_steps=1000)
+    lr = float(adam.schedule_lr(cfg, jnp.asarray(step)))
+    assert 0.0 <= lr <= cfg.lr * (1 + 1e-5)  # f32 rounding headroom
+
+
+@hp.given(st.integers(1, 4), st.integers(2, 10))
+def test_gae_zero_rewards_zero_values(B, T):
+    z = jnp.zeros((B, T))
+    mask = jnp.ones((B, T))
+    adv, ret = gae.gae_advantages(z, z, mask)
+    assert float(jnp.abs(adv).max()) == 0.0
+    assert float(jnp.abs(ret).max()) == 0.0
+
+
+@hp.given(st.integers(0, 3))
+def test_plans_from_seeds_satisfy_constraints_or_flag_oom(seed):
+    """Any plan the EA decodes is either feasible or flagged OOM — never
+    structurally invalid."""
+    from repro.core.ea import EvolutionarySearch
+    topo = topology.build_testbed("single_region",
+                                  counts={"A100": 4, "L4": 4})
+    wf = workflow.make_grpo(workflow.QWEN_1_7B, global_batch=64)
+    grouping = enum_mod.priority_groupings(wf)[seed % 4]
+    sizes = enum_mod.proportional_sizes(wf, grouping, topo.n)
+    ea = EvolutionarySearch(topo, wf, grouping, sizes, seed=seed)
+    for _ in range(3):
+        ind = ea.mutate(ea._random_individual())
+        plan = ea.decode(ea.local_search(ind))
+        ok, msg = check_constraints(topo, wf, plan)
+        assert ok or msg.startswith("OOM"), msg
+
+
+@hp.given(st.floats(0.0, 1.0))
+def test_eta_interpolates_phi(eta):
+    """Scalar-η Φ must land between full-parallel (max) and sequential
+    (sum) compositions."""
+    topo = topology.build_testbed("single_region",
+                                  counts={"A100": 4, "L4": 4})
+    wf = workflow.make_grpo(workflow.QWEN_1_7B, global_batch=64)
+    grouping = (tuple(range(wf.n_tasks)),)
+    plan = enum_mod.build_plan(topo, wf, grouping, [topo.n],
+                               list(range(topo.n)))
+    c_par = CostModel(topo, wf, eta=1.0).cost(plan)
+    c_seq = CostModel(topo, wf, eta=0.0).cost(plan)
+    c_mid = CostModel(topo, wf, eta=eta).cost(plan)
+    assert c_par <= c_mid + 1e-9
+    assert c_mid <= c_seq + 1e-9
