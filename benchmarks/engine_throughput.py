@@ -1,0 +1,82 @@
+"""Engine-level throughput benchmark: real RL iterations executed by the
+plan-driven engine under different plans and sync modes.
+
+For each (plan, mode) the engine runs real GRPO iterations on the tiny
+verifiable-addition actor and reports steady-state measured iteration
+time, samples/s, and the cost model's prediction for the same plan on
+the 8-GPU reference pool — the measured-vs-predicted axis the paper's
+Fig. 7 validates for the cost model.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core import enumerate as enum_mod, topology, workflow
+from repro.core.plan import check_constraints
+from repro.data.synthetic import AdditionTask, PromptDataset, VOCAB_SIZE
+from repro.models.config import ModelConfig
+from repro.rl.trainer import RLConfig, RLTrainer
+
+from benchmarks.common import QUICK, emit
+
+
+def _plan(topo, wf, grouping):
+    sizes = enum_mod.proportional_sizes(wf, grouping, topo.n)
+    plan = enum_mod.build_plan(topo, wf, grouping, sizes,
+                               list(range(topo.n)))
+    ok, msg = check_constraints(topo, wf, plan)
+    assert ok, msg
+    return plan
+
+
+def run(quick: bool = QUICK):
+    iters = 8 if quick else 24
+    batch = 8
+    cfg = ModelConfig(name="engine-bench", n_layers=2, d_model=96,
+                      n_heads=4, n_kv_heads=2, head_dim=24, d_ff=192,
+                      vocab_size=VOCAB_SIZE, dtype="float32")
+    task = AdditionTask(max_operand=9)
+    topo = topology.build_testbed("single_region",
+                                  counts={"A100": 4, "L4": 4})
+    spec = workflow.LLMSpec.from_model_config(cfg)
+
+    rows = []
+    for mode in ("sync", "async"):
+        wf = workflow.make_grpo(spec, synchronous=(mode == "sync"),
+                                global_batch=batch, n_rollouts=4,
+                                seq_in=task.prompt_len,
+                                seq_out=task.max_answer_len)
+        plans = {
+            "colocated": _plan(topo, wf, (tuple(range(wf.n_tasks)),)),
+            "gen|rest": _plan(topo, wf, tuple(sorted((
+                (0,), tuple(range(1, wf.n_tasks)))))),
+        }
+        for pname, plan in plans.items():
+            rl = RLConfig(algorithm="grpo", n_rollouts=4,
+                          max_new_tokens=task.max_answer_len,
+                          asynchronous=(mode == "async"))
+            trainer = RLTrainer(cfg, rl, task, jax.random.PRNGKey(0),
+                                plan=plan, topo=topo, wf=wf)
+            ds = iter(PromptDataset(task, batch=batch, seed=1))
+            key = jax.random.PRNGKey(7)
+            for _ in range(iters):
+                prompts, answers = next(ds)
+                key, k = jax.random.split(key)
+                trainer.iteration(prompts, answers, k)
+            meas = trainer.engine.measured_result()
+            cmp = trainer.engine.compare_with_simulator()
+            rows.append({
+                "mode": mode, "plan": pname,
+                "measured_ms": meas.iteration_time * 1e3,
+                "samples_per_s": meas.throughput,
+                "predicted_ms": cmp["predicted_iter_s"] * 1e3,
+                "ratio": cmp["ratio"],
+            })
+    emit("engine_throughput", rows)
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, "src")
+    run()

@@ -99,7 +99,7 @@ class HybridScheduler:
                         spent += b_mn
                         if cost < best.cost:
                             best = SearchResult(plan, cost, spent, tg, gg,
-                                                best.trace)
+                                                list(best.trace))
                         best.trace.append((spent, best.cost))
                     gg_n = sorted(
                         gg_n, key=lambda g: self._searcher(tg, g).best_cost
@@ -115,13 +115,26 @@ class HybridScheduler:
 
     def search_timed(self, seconds: float,
                      chunk: int = 64) -> SearchResult:
-        """Wall-clock budgeted variant (Figure 5)."""
+        """Wall-clock budgeted variant (Figure 5).
+
+        Resumes with *incremental* budget: each round grants a doubled
+        chunk of fresh evaluations to the persistent per-arm searchers
+        (EvolutionarySearch state carries over), so evaluations are
+        counted once instead of re-running the whole search from
+        scratch at every doubling."""
         t0 = time.monotonic()
         best = SearchResult(None, math.inf, 0)
-        budget = chunk
+        trace: List[Tuple[int, float]] = []
+        spent = 0
+        increment = chunk
         while time.monotonic() - t0 < seconds:
-            r = self.search(budget)
+            r = self.search(increment)
+            trace.extend((spent + e, min(c, best.cost)) for e, c in r.trace)
+            spent += r.evals
             if r.cost < best.cost:
-                best = r
-            budget *= 2
+                best = SearchResult(r.plan, r.cost, spent,
+                                    r.grouping, r.sizes)
+            best.evals = spent
+            increment *= 2
+        best.trace = trace
         return best

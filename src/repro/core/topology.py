@@ -220,6 +220,14 @@ SCENARIOS = ["single_region", "multi_region_hybrid", "multi_country",
              "multi_continent"]
 
 
+def build_host(n: int, spec: GPUSpec = A100) -> Topology:
+    """Homogeneous single-machine topology with `n` devices — the proxy
+    the execution engine plans against when no scheduler plan is given
+    (one device id per local accelerator)."""
+    devices = [Device(i, spec, 0, 0, "local") for i in range(n)]
+    return _build(devices, {})
+
+
 def build_tpu_pool(n_v5e: int = 32, n_v4: int = 16, seed: int = 0) -> Topology:
     """TPU-native heterogeneous pool: a v5e slice + a v4 slice joined by DCN
     (the TPU analogue of the paper's cross-region setting)."""

@@ -1,0 +1,12 @@
+"""Plan-driven execution engine.
+
+Consumes ``(RLWorkflow, Plan, Topology)`` and executes the real JAX RL
+iteration as the scheduler's plan dictates: per-task executors dispatched
+stage by stage, colocated tasks serialized, disjoint GPU groups run
+concurrently, async one-step off-policy double-buffering, and a measured
+``Event`` timeline that shares dataclasses with ``core.simulator`` so
+measured-vs-predicted comparison is one function call.
+"""
+from repro.engine.executor import Engine, EngineResult  # noqa: F401
+from repro.engine.pipeline import AsyncPipeline  # noqa: F401
+from repro.engine.placement import TaskPlacement, build_placements  # noqa: F401

@@ -1,0 +1,211 @@
+"""Task-graph executor: runs the RL iteration as the plan dictates.
+
+The engine walks ``wf.stages()`` (topological stages of the workflow
+graph) and dispatches the registered per-task executors.  Within a stage,
+tasks are partitioned into *lanes* by their plan task group: colocated
+tasks (same GPU group) serialize in task order, disjoint groups run
+concurrently (one thread per lane — jitted JAX computations release the
+GIL, so disjoint submeshes genuinely overlap).
+
+Every task execution is measured, and the measured durations are replayed
+through the same device-availability logic as ``core.simulator.simulate``
+— producing an ``Event`` timeline on the *plan's* device ids that shares
+the ``Event``/``SimResult`` dataclasses with the simulator, so a Fig-7
+style measured-vs-predicted comparison is ``compare_with_simulator()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+
+from repro.core.costmodel import CostModel
+from repro.core.plan import Plan
+from repro.core.simulator import Event, SimResult, simulate
+from repro.core.topology import Topology
+from repro.core.workflow import RLWorkflow, TaskKind
+from repro.engine import tasks as tasks_mod
+from repro.engine.pipeline import AsyncPipeline, sync_actor_weights
+from repro.engine.placement import build_placements
+
+
+@dataclasses.dataclass
+class EngineResult:
+    metrics: Dict[str, float]
+    events: List[Event]          # this iteration's replayed timeline
+    iteration: int
+
+
+class Engine:
+    def __init__(self, wf: RLWorkflow, plan: Plan, state,
+                 *, topo: Optional[Topology] = None,
+                 asynchronous: Optional[bool] = None,
+                 devices: Optional[Sequence] = None):
+        missing = set(range(wf.n_tasks)) - set(plan.parallel)
+        if missing:
+            raise ValueError(f"plan does not cover workflow tasks {missing}")
+        self.wf = wf
+        self.plan = plan
+        self.state = state
+        self.topo = topo
+        self.placements = build_placements(plan, range(wf.n_tasks), devices)
+        if asynchronous is None:
+            asynchronous = not wf.synchronous
+        self.pipeline = AsyncPipeline(asynchronous)
+        self._gen_task = next(t for t in range(wf.n_tasks)
+                              if wf.task(t).kind == TaskKind.GEN)
+        self._actor_train = next(
+            t for t in range(wf.n_tasks)
+            if wf.task(t).kind == TaskKind.TRAIN
+            and wf.task(t).name.startswith("actor"))
+        # replay state (plan-device availability), mirrors the simulator
+        self._dev_free: Dict[int, float] = {
+            int(d): 0.0 for t in range(wf.n_tasks)
+            for d in plan.assignment[t].reshape(-1)}
+        self._done_at: Dict[tuple, float] = {}
+        self._sync_done = 0.0
+        self._iter = 0
+        self._samples = 0
+        self.timeline: List[Event] = []
+
+    # -- stage dispatch ------------------------------------------------
+    def _lanes(self, stage: Sequence[int]) -> List[List[int]]:
+        """Partition a stage's tasks by plan task group (colocated tasks
+        share a lane and serialize; lanes run concurrently)."""
+        lanes: Dict[tuple, List[int]] = {}
+        for t in sorted(stage):
+            lanes.setdefault(self.plan.group_of(t).devices, []).append(t)
+        return list(lanes.values())
+
+    def _run_stage(self, stage: Sequence[int], bb: Dict[str, Any],
+                   durations: Dict[int, float]) -> None:
+        def run_lane(lane: List[int]) -> None:
+            for t in lane:
+                task = self.wf.task(t)
+                fn = tasks_mod.executor_for(task)
+                t0 = time.monotonic()
+                out = fn(self.state, bb, self.placements[t])
+                if out is not None:
+                    jax.block_until_ready(out)
+                durations[t] = time.monotonic() - t0
+
+        lanes = self._lanes(stage)
+        if len(lanes) == 1:
+            run_lane(lanes[0])
+            return
+        with ThreadPoolExecutor(max_workers=len(lanes)) as pool:
+            for f in [pool.submit(run_lane, lane) for lane in lanes]:
+                f.result()
+
+    # -- measured-timeline replay --------------------------------------
+    def _replay_iteration(self, durations: Dict[int, float],
+                          sync_dur: float, trained: bool) -> List[Event]:
+        """Replay measured durations through the simulator's scheduling
+        rules on the plan's device ids (same event ordering semantics)."""
+        it = self._iter
+        events: List[Event] = []
+        for t in sorted(durations):
+            task = self.wf.task(t)
+            dep_ready = max([self._done_at.get((it, d), 0.0)
+                             for d in task.depends_on], default=0.0)
+            if task.kind == TaskKind.GEN:
+                dep_ready = max(dep_ready, self._sync_done)
+            devs = [int(d) for d in self.plan.assignment[t].reshape(-1)]
+            start = max([dep_ready] + [self._dev_free[d] for d in devs])
+            end = start + durations[t]
+            for d in devs:
+                self._dev_free[d] = end
+            events.append(Event(start, "start", it, t))
+            events.append(Event(end, "end", it, t))
+            self._done_at[(it, t)] = end
+        if trained:
+            train_end = self._done_at[(it, self._actor_train)]
+            self._sync_done = train_end + sync_dur
+            if self.wf.synchronous:
+                for d in self._dev_free:
+                    self._dev_free[d] = max(self._dev_free[d],
+                                            self._sync_done)
+            else:
+                for d in self.plan.assignment[self._gen_task].reshape(-1):
+                    d = int(d)
+                    self._dev_free[d] = max(self._dev_free[d],
+                                            self._sync_done)
+        events.sort(key=lambda e: e.time)
+        self.timeline.extend(events)
+        self._iter += 1
+        return events
+
+    # -- one iteration --------------------------------------------------
+    def run_iteration(self, prompts, answers, rng) -> EngineResult:
+        bb: Dict[str, Any] = {"lock": threading.Lock(), "metrics": {}}
+        bb.update(self.state.prepare_inputs(prompts, answers, rng))
+        self._samples = int(bb["prompts_rep"].shape[0])
+        durations: Dict[int, float] = {}
+        before_stage = getattr(self.state, "before_stage", None)
+        for stage in self.wf.stages():
+            has_gen = any(self.wf.task(t).kind == TaskKind.GEN
+                          for t in stage)
+            if before_stage is not None:
+                # shared cross-task prep (e.g. advantages) runs outside
+                # the per-task timers so lane measurements stay honest
+                before_stage([self.wf.task(t) for t in stage], bb)
+            self._run_stage(stage, bb, durations)
+            if has_gen:
+                bundle = self.pipeline.push(bb.pop("fresh"))
+                if bundle is None:
+                    # pipeline fill: nothing to train on yet, no sync
+                    events = self._replay_iteration(durations, 0.0,
+                                                    trained=False)
+                    return EngineResult(self.state.fill_metrics(), events,
+                                        self._iter - 1)
+                bb["bundle"] = bundle
+                self.pipeline.record(self._iter, bundle,
+                                     self.state.weight_version)
+
+        t0 = time.monotonic()
+        nbytes = sync_actor_weights(self.state,
+                                    self.placements[self._gen_task])
+        jax.block_until_ready(self.state.gen_params)
+        sync_dur = time.monotonic() - t0
+        metrics = dict(bb["metrics"])
+        metrics["sync_gb"] = nbytes / 1e9
+        events = self._replay_iteration(durations, sync_dur, trained=True)
+        return EngineResult(metrics, events, self._iter - 1)
+
+    # -- measured vs predicted -------------------------------------------
+    def measured_result(self) -> SimResult:
+        """Measured timeline in the simulator's SimResult shape."""
+        if not self.timeline:
+            return SimResult(0.0, 0.0, 0.0, [])
+        makespan = max(e.time for e in self.timeline)
+        gen_starts = sorted(e.time for e in self.timeline
+                            if e.task == self._gen_task
+                            and e.kind == "start")
+        if len(gen_starts) >= 3:
+            iter_time = gen_starts[-1] - gen_starts[-2]
+        else:
+            iter_time = makespan / max(self._iter, 1)
+        iter_time = max(iter_time, 1e-9)
+        return SimResult(iter_time, makespan, self._samples / iter_time,
+                         sorted(self.timeline, key=lambda e: e.time))
+
+    def compare_with_simulator(self, cost_model: Optional[CostModel] = None,
+                               n_iterations: Optional[int] = None
+                               ) -> Dict[str, float]:
+        """Fig-7 style: measured iteration time vs the cost model's
+        event-driven prediction for the same (wf, plan) on `topo`."""
+        if self.topo is None:
+            raise ValueError("engine was built without a Topology")
+        sim = simulate(self.topo, self.wf, self.plan,
+                       n_iterations=n_iterations or max(self._iter, 4),
+                       cost_model=cost_model)
+        meas = self.measured_result()
+        return {"measured_iter_s": meas.iteration_time,
+                "predicted_iter_s": sim.iteration_time,
+                "ratio": meas.iteration_time / sim.iteration_time,
+                "measured_makespan_s": meas.makespan,
+                "predicted_makespan_s": sim.makespan}

@@ -1,0 +1,84 @@
+"""Plan → JAX placement: map each task's (dp, pp, tp) + tasklet assignment
+onto the host's real devices.
+
+The scheduler plans against the paper's heterogeneous pools (up to 64
+GPUs); the host executing the plan usually has fewer devices.  The folding
+rule is deterministic so the same plan always lands on the same submeshes:
+
+  1. every plan device id ``d`` folds onto ``local_devices[d % L]``
+     (L = number of real devices), preserving the plan's tasklet order;
+  2. duplicates collapse (first occurrence wins), giving ``n`` distinct
+     real devices for the task;
+  3. the task's mesh is ``(data=n/tp', model=tp')`` with
+     ``tp' = gcd(tp, n)`` — tensor parallelism survives when it divides
+     the folded device count, pipeline stages collapse into the data
+     axis (no cross-host pipeline runtime on a single host).
+
+Mesh axes are ``("data", "model")`` so ``parallel.sharding`` param rules
+apply unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh
+import numpy as np
+
+from repro.core.plan import Plan
+from repro.parallel import sharding as sh
+
+
+@dataclasses.dataclass
+class TaskPlacement:
+    task: int
+    dp: int                       # plan-level parallelization
+    pp: int
+    tp: int
+    plan_devices: Tuple[int, ...]   # plan device ids, tasklet order
+    local_devices: Tuple            # distinct folded jax devices
+    mesh: Mesh                      # ("data", "model") over local_devices
+
+    @property
+    def mesh_shape(self) -> Tuple[int, int]:
+        return tuple(self.mesh.devices.shape)
+
+    def param_shardings(self, params):
+        """NamedShardings for a parameter pytree under this placement
+        (specs sanitized so non-dividing axes drop to replication)."""
+        specs = sh.param_tree_specs(params)
+        return sh.named_shardings(self.mesh, specs, params)
+
+
+def fold_devices(plan_devices: Sequence[int], local_devices) -> List:
+    """Deterministic device folding: plan id d -> local_devices[d % L]."""
+    L = len(local_devices)
+    folded = [local_devices[int(d) % L] for d in plan_devices]
+    distinct, seen = [], set()
+    for dev in folded:
+        if id(dev) not in seen:
+            seen.add(id(dev))
+            distinct.append(dev)
+    return distinct
+
+
+def build_placement(plan: Plan, t: int,
+                    devices: Optional[Sequence] = None) -> TaskPlacement:
+    devices = list(devices) if devices is not None else jax.devices()
+    dp, pp, tp = plan.parallel[t]
+    plan_devs = tuple(int(d) for d in plan.assignment[t].reshape(-1))
+    distinct = fold_devices(plan_devs, devices)
+    n = len(distinct)
+    tp_eff = math.gcd(tp, n)
+    mesh = Mesh(np.array(distinct).reshape(n // tp_eff, tp_eff),
+                ("data", "model"))
+    return TaskPlacement(t, dp, pp, tp, plan_devs, tuple(distinct), mesh)
+
+
+def build_placements(plan: Plan, tasks: Sequence[int],
+                     devices: Optional[Sequence] = None
+                     ) -> Dict[int, TaskPlacement]:
+    devices = list(devices) if devices is not None else jax.devices()
+    return {t: build_placement(plan, t, devices) for t in tasks}

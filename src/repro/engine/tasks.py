@@ -1,0 +1,162 @@
+"""Per-task executors for the RL workflow graph.
+
+Each workflow task (GEN / INF / TRAIN) has a registered executor that runs
+the real JAX computation for that task against the shared execution state
+``st`` (the trainer's parameters, optimizers and jitted functions) and the
+iteration blackboard ``bb``.  The engine dispatches them stage by stage as
+the plan dictates; executors return the JAX value the engine should block
+on when timing the task.
+
+Registration is by (TaskKind, task name), with a (TaskKind, None) fallback
+so custom workflows can reuse the generic executor of a kind.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.workflow import Task, TaskKind
+from repro.rl import gae, losses
+from repro.rl import rewards as rewards_mod
+
+_EXECUTORS: Dict[Tuple[TaskKind, Optional[str]], Callable] = {}
+
+
+def register(kind: TaskKind, name: Optional[str] = None):
+    def deco(fn):
+        _EXECUTORS[(kind, name)] = fn
+        return fn
+    return deco
+
+
+def executor_for(task: Task) -> Callable:
+    fn = _EXECUTORS.get((task.kind, task.name)) \
+        or _EXECUTORS.get((task.kind, None))
+    if fn is None:
+        raise KeyError(f"no executor registered for task "
+                       f"{task.name!r} ({task.kind})")
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# GEN
+# ---------------------------------------------------------------------------
+
+@register(TaskKind.GEN)
+def run_generation(st, bb, placement):
+    """Actor generation on the generation replica (pre-sync weights)."""
+    with placement.mesh:
+        ro = st._generate(st.gen_params, prompts=bb["prompts_rep"],
+                          rng=bb["rng"])
+    bb["fresh"] = {"rollout": ro, "answers_rep": bb["answers_rep"],
+                   "gen_start": bb["gen_start"],
+                   "gen_version": st.weight_version}
+    return ro["sequences"]
+
+
+# ---------------------------------------------------------------------------
+# INF
+# ---------------------------------------------------------------------------
+
+@register(TaskKind.INF, "reward_inference")
+def run_reward(st, bb, placement):
+    b = bb["bundle"]
+    gen_np = np.asarray(b["rollout"]["gen_tokens"])
+    scores = st.task.reward_batch(b["answers_rep"], gen_np)
+    with bb["lock"]:
+        bb["scores"] = scores
+    return None
+
+
+@register(TaskKind.INF, "reference_inference")
+def run_reference(st, bb, placement):
+    b = bb["bundle"]
+    with placement.mesh:
+        lp_ref = st._ref_logp(st.ref, b["rollout"]["sequences"],
+                              gen_start=b["gen_start"])
+    with bb["lock"]:
+        bb["lp_ref"] = lp_ref
+    return lp_ref
+
+
+@register(TaskKind.INF, "critic_inference")
+def run_critic_inference(st, bb, placement):
+    b = bb["bundle"]
+    with placement.mesh:
+        values = st._critic_vals(st.critic, st.value_head,
+                                 b["rollout"]["sequences"],
+                                 gen_start=b["gen_start"])
+    with bb["lock"]:
+        bb["values"] = values
+    return values
+
+
+# ---------------------------------------------------------------------------
+# TRAIN (shared advantage preparation, then per-model update)
+# ---------------------------------------------------------------------------
+
+def ensure_train_batch(st, bb):
+    """KL-penalised rewards + advantages, computed once per iteration.
+
+    Both training executors may run concurrently on disjoint GPU groups;
+    the first through the lock materializes the batch."""
+    with bb["lock"]:
+        if "batch" in bb:
+            return
+        rl = st.rl
+        b = bb["bundle"]
+        ro = b["rollout"]
+        mask = ro["mask"]
+        tok_rewards, kl = losses.kl_penalised_rewards(
+            jnp.asarray(bb["scores"]), ro["logprobs"], bb["lp_ref"], mask,
+            kl_beta=rl.kl_beta)
+        bb["metrics"].update({
+            "reward_mean": float(bb["scores"].mean()),
+            "kl": float(kl),
+            "gen_len": float(np.asarray(mask).sum(1).mean()),
+        })
+        if rl.algorithm == "ppo":
+            values = bb["values"]
+            adv, returns = gae.gae_advantages(
+                tok_rewards, values * mask, mask,
+                gamma=rl.gamma, lam=rl.lam)
+            bb["returns"] = returns
+        else:
+            seq_reward = np.asarray(tok_rewards).sum(1)
+            adv = gae.grpo_advantages(jnp.asarray(seq_reward),
+                                      rl.n_rollouts, mask)
+        if rl.whiten_advantages:
+            adv = gae.whiten(adv, mask)
+        bb["batch"] = {"sequences": ro["sequences"],
+                       "logp_old": ro["logprobs"],
+                       "advantages": adv, "mask": mask}
+
+
+@register(TaskKind.TRAIN, "actor_training")
+def run_actor_training(st, bb, placement):
+    ensure_train_batch(st, bb)
+    b = bb["bundle"]
+    with placement.mesh:
+        st.actor, st.actor_opt, am = st._actor_step(
+            st.actor, st.actor_opt, bb["batch"], gen_start=b["gen_start"])
+    with bb["lock"]:
+        bb["metrics"].update({k: float(v) for k, v in am.items()})
+    return st.actor
+
+
+@register(TaskKind.TRAIN, "critic_training")
+def run_critic_training(st, bb, placement):
+    ensure_train_batch(st, bb)
+    b = bb["bundle"]
+    mask = bb["batch"]["mask"]
+    cbatch = dict(bb["batch"], values_old=bb["values"] * mask,
+                  returns=bb["returns"])
+    with placement.mesh:
+        (st.critic, st.value_head), st.critic_opt, closs = \
+            st._critic_step((st.critic, st.value_head), st.critic_opt,
+                            cbatch, gen_start=b["gen_start"])
+    with bb["lock"]:
+        bb["metrics"]["critic_loss"] = float(closs)
+    return closs

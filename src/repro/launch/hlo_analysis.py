@@ -133,15 +133,18 @@ def split_computations(hlo: str) -> Dict[str, List[str]]:
 
 
 def _operand_names(args: str) -> List[str]:
-    # strip anything after "), " attributes by cutting at the matching depth
+    # strip anything after "), " attributes by cutting at the matching
+    # depth; brackets/braces nest too (commas inside shapes like
+    # f32[64,32,32]{2,1,0} must not split the operand list, or operand
+    # indices misalign and per-operand accounting charges wrong shapes)
     depth = 0
     out = []
     cur = []
     for ch in args:
-        if ch == "(":
+        if ch in "([{":
             depth += 1
             cur.append(ch)
-        elif ch == ")":
+        elif ch in ")]}":
             if depth == 0:
                 break
             depth -= 1

@@ -14,9 +14,23 @@ import argparse
 import re
 from typing import Dict, List, Tuple
 
-import zstandard
-
 from repro.launch import hlo_analysis as ha
+
+
+def read_hlo(path: str) -> str:
+    """Read an HLO dump; `.zst` files need zstandard, plain text does not."""
+    with open(path, "rb") as f:
+        data = f.read()
+    if path.endswith(".zst"):
+        try:
+            import zstandard
+        except ImportError as e:
+            raise ImportError(
+                "reading compressed .hlo.zst dumps requires the optional "
+                "'zstandard' package; pass an uncompressed .hlo file "
+                "instead") from e
+        return zstandard.ZstdDecompressor().decompress(data).decode()
+    return data.decode()
 
 
 def op_contributions(hlo: str):
@@ -135,10 +149,7 @@ def main():
     ap.add_argument("--sort", choices=["flops", "bytes", "coll"],
                     default="bytes")
     args = ap.parse_args()
-    with open(args.hlo_path, "rb") as f:
-        data = f.read()
-    hlo = zstandard.ZstdDecompressor().decompress(data).decode() \
-        if args.hlo_path.endswith(".zst") else data.decode()
+    hlo = read_hlo(args.hlo_path)
     rows = op_contributions(hlo)
     key = {"flops": 0, "bytes": 1, "coll": 2}[args.sort]
     rows.sort(key=lambda r: -r[key])

@@ -3,6 +3,14 @@ mesh (CPU smoke scale by default, production mesh shapes via dry-run).
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --smoke \
         --steps 20 --batch 8 --seq 128
+
+With ``--rl {grpo,ppo}`` the launcher instead runs the plan-driven RL
+path end-to-end: HetRL scheduler search on the chosen testbed scenario →
+``Plan`` → engine execution of real RL iterations → measured vs
+cost-model iteration time:
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --smoke \
+        --rl grpo --steps 10 --batch 8 --search-budget 120
 """
 from __future__ import annotations
 
@@ -38,6 +46,61 @@ def make_batch(cfg, key, batch, seq):
     return out
 
 
+def run_rl(args) -> None:
+    """Scheduler search -> Plan -> engine-executed RL iterations."""
+    import numpy as np
+
+    from repro.core import topology, workflow
+    from repro.core.plan import check_constraints
+    from repro.core.sha import HybridScheduler
+    from repro.data.synthetic import AdditionTask, PromptDataset, VOCAB_SIZE
+    from repro.rl.trainer import RLConfig, RLTrainer
+
+    import dataclasses
+
+    cfg = archs.get(args.arch, smoke=args.smoke)
+    # RL on the verifiable addition task needs its small vocab; fp32 keeps
+    # the tiny-model smoke run numerically stable on CPU
+    cfg = dataclasses.replace(cfg, vocab_size=VOCAB_SIZE, dtype="float32")
+    task = AdditionTask(max_operand=9)
+    topo = topology.build_testbed(args.scenario,
+                                  counts={"A100": 4, "L4": 4})
+    spec = workflow.LLMSpec.from_model_config(cfg)
+    wf = workflow.make_workflow(args.rl, spec,
+                                synchronous=not args.asynchronous,
+                                global_batch=args.batch, n_rollouts=4,
+                                seq_in=task.prompt_len,
+                                seq_out=task.max_answer_len)
+    sched = HybridScheduler(topo, wf, max_groupings=8,
+                            max_sizes_per_grouping=4)
+    r = sched.search(budget=args.search_budget)
+    ok, msg = check_constraints(topo, wf, r.plan)
+    assert ok, msg
+    print(f"plan: grouping={r.grouping} sizes={r.sizes} "
+          f"predicted {r.cost * 1e3:.3f}ms/iter ({r.evals} evals)")
+
+    rl = RLConfig(algorithm=args.rl, n_rollouts=4,
+                  max_new_tokens=task.max_answer_len, lr=args.lr,
+                  asynchronous=args.asynchronous)
+    trainer = RLTrainer(cfg, rl, task, jax.random.PRNGKey(0), plan=r.plan,
+                        topo=topo, wf=wf)
+    ds = iter(PromptDataset(task, batch=args.batch, seed=1))
+    key = jax.random.PRNGKey(42)
+    for step in range(args.steps):
+        prompts, answers = next(ds)
+        key, k = jax.random.split(key)
+        t0 = time.time()
+        m = trainer.iteration(prompts, answers, k)
+        print(f"iter {step:4d} reward={m['reward_mean']:.3f} "
+              f"kl={m['kl']:.3f} sync={m['sync_gb'] * 1e3:.1f}MB "
+              f"({time.time() - t0:.2f}s)")
+    cmp = trainer.engine.compare_with_simulator()
+    print(f"measured {cmp['measured_iter_s'] * 1e3:.1f}ms/iter vs "
+          f"cost-model {cmp['predicted_iter_s'] * 1e3:.3f}ms/iter "
+          f"(ratio {cmp['ratio']:.2f})")
+    print("done")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -47,7 +110,19 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--rl", choices=["grpo", "ppo"], default=None,
+                    help="run the plan-driven RL path instead of LM steps")
+    ap.add_argument("--async", dest="asynchronous", action="store_true",
+                    help="one-step off-policy RL execution (with --rl)")
+    ap.add_argument("--scenario", default="single_region",
+                    help="testbed scenario the scheduler plans against")
+    ap.add_argument("--search-budget", type=int, default=120,
+                    help="scheduler budget in cost-model evaluations")
     args = ap.parse_args()
+
+    if args.rl:
+        run_rl(args)
+        return
 
     cfg = archs.get(args.arch, smoke=args.smoke)
     mesh = make_host_mesh()

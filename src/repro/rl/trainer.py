@@ -3,10 +3,15 @@
 The iteration structure mirrors the paper's workflow graph exactly:
   actor_generation -> {reward, reference, critic} inference ->
   {actor, critic} training -> weight reshard/sync.
-On a single host the tasks execute sequentially; the execution plan from
-the scheduler (when provided) annotates which devices/submeshes each task
-would occupy, and the weight-sync step goes through rl.sync so the
-transfer volume is accounted.
+
+Execution is delegated to the plan-driven engine (``repro.engine``): the
+scheduler's ``Plan`` decides which tasks colocate (serialize) and which
+GPU groups run concurrently, the async one-step off-policy double buffer
+lives in ``engine.pipeline``, and every iteration records a measured
+``Event`` timeline comparable with ``core.simulator.simulate``.  The
+trainer itself is a thin facade that owns the JAX state (params,
+optimizers, jitted step functions) the task executors operate on; its
+public API and metrics dict are unchanged from the pre-engine version.
 """
 from __future__ import annotations
 
@@ -18,12 +23,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import enumerate as enum_mod, topology, workflow
 from repro.data.synthetic import AdditionTask, EOS
+from repro.engine.executor import Engine
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.optim import adam
 from repro.rl import gae, losses, rewards as rewards_mod, rollout
-from repro.rl.sync import sync_weights
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,13 +52,22 @@ class RLConfig:
     asynchronous: bool = False
 
 
+def default_plan(wf: workflow.RLWorkflow, n_devices: Optional[int] = None):
+    """Colocate-all plan over the host devices (what a plan-less trainer
+    executes): one task group, every task on every device."""
+    n = n_devices or jax.device_count()
+    topo = topology.build_host(n)
+    grouping = (tuple(range(wf.n_tasks)),)
+    return topo, enum_mod.build_plan(topo, wf, grouping, [n],
+                                     list(range(n)))
+
+
 class RLTrainer:
     def __init__(self, model_cfg: ModelConfig, rl_cfg: RLConfig,
-                 task: AdditionTask, key, plan=None):
+                 task: AdditionTask, key, plan=None, topo=None, wf=None):
         self.cfg = model_cfg
         self.rl = rl_cfg
         self.task = task
-        self.plan = plan
         k_actor, k_critic, k_vh = jax.random.split(key, 3)
         self.actor = T.init_params(k_actor, model_cfg)
         self.ref = jax.tree_util.tree_map(jnp.copy, self.actor)
@@ -60,6 +75,7 @@ class RLTrainer:
             self.actor, adam.AdamConfig(lr=rl_cfg.lr))
         self.gen_params = self.actor  # generation replica (synced weights)
         self.sync_bytes = 0
+        self.weight_version = 0
         if rl_cfg.algorithm == "ppo":
             self.critic = T.init_params(k_critic, model_cfg)
             self.value_head = rewards_mod.init_value_head(k_vh, model_cfg)
@@ -70,6 +86,34 @@ class RLTrainer:
             max_new_tokens=rl_cfg.max_new_tokens,
             temperature=rl_cfg.temperature, eos_token=EOS)
         self._jit()
+
+        # plan-driven engine: the plan decides task colocation/concurrency
+        # and the sync path; without one, execute the colocate-all default.
+        # Pass the workflow the plan was searched with (its global_batch
+        # scales the cost model) so measured-vs-predicted compares like
+        # with like; otherwise a representative one is built here.
+        if wf is not None and wf.algorithm != rl_cfg.algorithm:
+            raise ValueError(f"workflow algorithm {wf.algorithm!r} != "
+                             f"rl config algorithm {rl_cfg.algorithm!r}")
+        self.wf = wf or workflow.make_workflow(
+            rl_cfg.algorithm,
+            workflow.LLMSpec.from_model_config(model_cfg),
+            synchronous=not rl_cfg.asynchronous,
+            n_rollouts=rl_cfg.n_rollouts,
+            seq_in=getattr(task, "prompt_len", 16),
+            seq_out=rl_cfg.max_new_tokens,
+            global_batch=1)
+        if plan is not None and \
+                set(plan.parallel) != set(range(self.wf.n_tasks)):
+            raise ValueError(
+                f"plan covers tasks {sorted(plan.parallel)} but the "
+                f"{rl_cfg.algorithm} workflow has {self.wf.n_tasks} tasks")
+        if plan is None:
+            host_topo, plan = default_plan(self.wf)
+            topo = topo if topo is not None else host_topo
+        self.plan = plan
+        self.engine = Engine(self.wf, plan, self, topo=topo,
+                             asynchronous=rl_cfg.asynchronous)
 
     # ------------------------------------------------------------------
     def _jit(self):
@@ -131,89 +175,39 @@ class RLTrainer:
             self._critic_step = jax.jit(critic_step,
                                         static_argnames=("gen_start",))
 
+    # -- engine hooks ---------------------------------------------------
+    def prepare_inputs(self, prompts: np.ndarray, answers: np.ndarray,
+                       rng) -> Dict[str, object]:
+        G = self.rl.n_rollouts
+        return {"prompts_rep": jnp.asarray(np.repeat(prompts, G, axis=0)),
+                "answers_rep": np.repeat(answers, G, axis=0),
+                "gen_start": prompts.shape[1], "rng": rng}
+
+    def before_stage(self, stage_tasks, bb) -> None:
+        """Materialize the shared KL/advantage batch before the training
+        stage dispatches, so neither training lane's measured duration
+        absorbs the cross-task prep (or the other lane's lock wait)."""
+        from repro.core.workflow import TaskKind
+        from repro.engine.tasks import ensure_train_batch
+        if bb.get("bundle") is not None and \
+                any(t.kind == TaskKind.TRAIN for t in stage_tasks):
+            ensure_train_batch(self, bb)
+
+    def fill_metrics(self) -> Dict[str, float]:
+        return {"reward_mean": 0.0, "kl": 0.0, "gen_len": 0.0,
+                "loss": 0.0, "pipeline_fill": 1.0, "sync_gb": 0.0}
+
     # ------------------------------------------------------------------
     def iteration(self, prompts: np.ndarray, answers: np.ndarray,
                   rng) -> Dict[str, float]:
-        """One RL iteration over a prompt batch.
+        """One RL iteration over a prompt batch, executed by the engine.
 
         Synchronous: generate -> infer -> train -> sync (iteration-level
         barrier).  Asynchronous: generate with the PREVIOUS sync's weights
         while training on the PREVIOUS iteration's rollouts (one-step
         off-policy); the first call only produces rollouts."""
-        rl = self.rl
-        G = rl.n_rollouts
-        prompts_rep = np.repeat(prompts, G, axis=0)
-        answers_rep = np.repeat(answers, G, axis=0)
-        P = prompts.shape[1]
-
-        # --- task 1: actor generation (on the generation replica) ---
-        ro = self._generate(self.gen_params,
-                            prompts=jnp.asarray(prompts_rep), rng=rng)
-        if rl.asynchronous:
-            pending = getattr(self, "_pending", None)
-            self._pending = (ro, answers_rep, P)
-            if pending is None:
-                # pipeline fill: nothing to train on yet
-                return {"reward_mean": 0.0, "kl": 0.0, "gen_len": 0.0,
-                        "loss": 0.0, "pipeline_fill": 1.0, "sync_gb": 0.0}
-            ro, answers_rep, P = pending
-        sequences = ro["sequences"]
-        mask = ro["mask"]
-
-        # --- task 2: reward inference (programmatic verifier) ---
-        gen_np = np.asarray(ro["gen_tokens"])
-        scores = self.task.reward_batch(answers_rep, gen_np)
-
-        # --- task 3: reference inference ---
-        lp_ref = self._ref_logp(self.ref, sequences, gen_start=P)
-
-        # --- KL-penalised token rewards ---
-        tok_rewards, kl = losses.kl_penalised_rewards(
-            jnp.asarray(scores), ro["logprobs"], lp_ref, mask,
-            kl_beta=rl.kl_beta)
-
-        metrics: Dict[str, float] = {
-            "reward_mean": float(scores.mean()),
-            "kl": float(kl),
-            "gen_len": float(np.asarray(mask).sum(1).mean()),
-        }
-
-        # --- advantages ---
-        if rl.algorithm == "ppo":
-            # task 4: critic inference
-            values = self._critic_vals(self.critic, self.value_head,
-                                       sequences, gen_start=P)
-            adv, returns = gae.gae_advantages(
-                tok_rewards, values * mask, mask,
-                gamma=rl.gamma, lam=rl.lam)
-        else:
-            seq_reward = np.asarray(tok_rewards).sum(1)
-            adv = gae.grpo_advantages(jnp.asarray(seq_reward), G, mask)
-            returns = values = None
-        if rl.whiten_advantages:
-            adv = gae.whiten(adv, mask)
-
-        batch = {"sequences": sequences, "logp_old": ro["logprobs"],
-                 "advantages": adv, "mask": mask}
-
-        # --- task 5: actor training ---
-        self.actor, self.actor_opt, am = self._actor_step(
-            self.actor, self.actor_opt, batch, gen_start=P)
-        metrics.update({k: float(v) for k, v in am.items()})
-
-        # --- task 6: critic training (PPO only) ---
-        if rl.algorithm == "ppo":
-            cbatch = dict(batch, values_old=values * mask, returns=returns)
-            (self.critic, self.value_head), self.critic_opt, closs = \
-                self._critic_step((self.critic, self.value_head),
-                                  self.critic_opt, cbatch, gen_start=P)
-            metrics["critic_loss"] = float(closs)
-
-        # --- weight reshard/sync: training replica -> generation replica ---
-        self.gen_params, nbytes = sync_weights(self.actor)
-        self.sync_bytes += nbytes
-        metrics["sync_gb"] = nbytes / 1e9
-        return metrics
+        res = self.engine.run_iteration(prompts, answers, rng)
+        return res.metrics
 
     # ------------------------------------------------------------------
     def evaluate(self, prompts: np.ndarray, answers: np.ndarray,
