@@ -16,10 +16,13 @@ def main() -> None:
     from benchmarks import (engine_throughput, fig3_e2e, fig4_loadbalance,
                             fig5_search_efficiency, fig6_small_scale_ilp,
                             fig7_costmodel_validation,
-                            fig8_training_quality, fig10_heterogeneity)
+                            fig8_training_quality, fig10_heterogeneity,
+                            genserve_throughput)
     benches = [
         ("engine_throughput (plan-driven engine, measured vs predicted)",
          engine_throughput.run),
+        ("genserve_throughput (continuous batching vs single-wave decode)",
+         genserve_throughput.run),
         ("fig3_e2e (Figure 3: end-to-end throughput)", fig3_e2e.run),
         ("fig4_loadbalance (Figure 4: LB ablation)", fig4_loadbalance.run),
         ("fig5_search_efficiency (Figure 5)", fig5_search_efficiency.run),

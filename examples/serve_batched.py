@@ -1,7 +1,7 @@
-"""Batched serving demo: prefill + KV-cache decode for any assigned
-architecture (smoke scale on CPU), reporting tokens/s — including the
-sliding-window ring-buffer cache (mixtral/gemma2) and recurrent-state
-decode (rwkv6/jamba).
+"""Batched serving demo: continuous-batching decode for any assigned
+architecture (smoke scale on CPU), reporting tokens/s and decode-wave
+occupancy — including the sliding-window ring-buffer cache
+(mixtral/gemma2) and recurrent-state decode (rwkv6/jamba).
 
     PYTHONPATH=src python examples/serve_batched.py --arch mixtral-8x7b
 """
@@ -15,16 +15,19 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import archs
+from repro.core.plan import decode_wave
+from repro.genserve import adapter as genserve
 from repro.models import transformer as T
-from repro.models.sampling import greedy_decode
+from repro.rl.rollout import SamplerConfig
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mixtral-8x7b")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=48)
     ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--wave", type=int, default=4)
     args = ap.parse_args()
 
     cfg = archs.get(args.arch, smoke=True)
@@ -36,19 +39,25 @@ def main():
     key = jax.random.PRNGKey(1)
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size, jnp.int32)
-    fn = jax.jit(lambda p, x: greedy_decode(p, cfg, x, args.new_tokens))
-    toks = fn(params, prompts)  # compile
+    wave = args.wave or decode_wave(args.batch)
+    sampler = SamplerConfig(max_new_tokens=args.new_tokens, greedy=True)
+    gen = lambda: genserve.generate(params, cfg, prompts,
+                                    jax.random.PRNGKey(2), sampler,
+                                    wave=wave, decode_chunk=4,
+                                    fast_path=False)
+    gen()  # compile
     t0 = time.time()
-    toks = fn(params, prompts)
-    toks.block_until_ready()
+    ro, stats = gen()
+    jax.block_until_ready(ro["sequences"])
     dt = time.time() - t0
     windows = sorted({s.window for s in cfg.pattern if s.window})
     print(f"arch={cfg.name} (windows={windows or 'full'}) "
-          f"batch={args.batch} prompt={args.prompt_len} "
-          f"new={args.new_tokens}")
+          f"batch={args.batch} wave={stats['wave']} "
+          f"prompt={args.prompt_len} new={args.new_tokens}")
     print(f"decode throughput: {args.batch * args.new_tokens / dt:.1f} "
-          f"tok/s ({dt:.2f}s)")
-    print("sample:", toks[0, :16].tolist())
+          f"tok/s ({dt:.2f}s; mean occupancy "
+          f"{stats['mean_occupancy']:.2f})")
+    print("sample:", ro["sequences"][0, args.prompt_len:][:16].tolist())
 
 
 if __name__ == "__main__":

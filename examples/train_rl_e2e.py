@@ -111,6 +111,14 @@ def main():
           f"pool (ratio {cmp['ratio']:.2f}; the plan's colocation and "
           f"sync path drive both timelines)")
 
+    # --- decode-wave occupancy: genserve measured vs cost model ---
+    occ = trainer.engine.wave_occupancy_summary()
+    n_waves = len(trainer.engine.wave_timeline) // 2
+    print(f"genserve: {n_waves} wave rounds recorded; measured mean "
+          f"slot occupancy {occ['measured_occupancy']:.2f} vs cost-model "
+          f"decode-wave prediction {occ.get('predicted_occupancy', 0):.2f} "
+          f"(ratio {occ.get('ratio', float('nan')):.2f})")
+
 
 if __name__ == "__main__":
     main()

@@ -21,7 +21,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.plan import BYTES_BF16, Plan
+from repro.core.plan import (BYTES_BF16, MAX_DECODE_WAVE, Plan, decode_wave)
 from repro.core.topology import Topology
 from repro.core.workflow import RLWorkflow, Task, TaskKind
 
@@ -228,6 +228,30 @@ class CostModel:
                         factor * nm * mbs * nl * fl / (self.topo.comp(d) * tp))
         return worst
 
+    def gen_decode_wave(self, plan: Plan, t: int, i: int = 0) -> int:
+        """Decode-wave width the C_hbm term assumes for GEN replica i —
+        the bound the genserve engine enforces at execution time."""
+        nm, mbs = self._nm_mbs(plan, t, i)
+        return decode_wave(nm * mbs)
+
+    def gen_wave_occupancy(self, plan: Plan, t: int) -> float:
+        """Predicted mean decode-slot occupancy for GEN task t,
+        aggregated over dp replicas (total requests / total waves, since
+        every wave decodes the same seq_out under the cost model) —
+        comparable against the measured slot-table trace of
+        ``repro.genserve`` (cost-model parity on the decode-wave axis)."""
+        task = self.wf.task(t)
+        if task.kind != TaskKind.GEN:
+            return 0.0
+        dp, _, _ = plan.parallel[t]
+        requests, waves = 0.0, 0.0
+        for i in range(dp):
+            nm, mbs = self._nm_mbs(plan, t, i)
+            n = max(nm * mbs, 1)
+            requests += n
+            waves += math.ceil(n / MAX_DECODE_WAVE)
+        return requests / max(waves, 1.0)
+
     def c_hbm(self, plan: Plan, t: int, i: int, j: int) -> float:
         task = self.wf.task(t)
         if task.kind != TaskKind.GEN:
@@ -240,8 +264,7 @@ class CostModel:
         dp, pp, tp = plan.parallel[t]
         nm, mbs = self._nm_mbs(plan, t, i)
         nl = plan.stage_layers(self.wf, t, j)
-        from repro.core.plan import decode_wave
-        dbs = decode_wave(nm * mbs)  # continuous batching in bounded waves
+        dbs = self.gen_decode_wave(plan, t, i)  # bounded-wave batching
         worst = 0.0
         for k in range(tp):
             d = int(plan.assignment[t][i, j, k])

@@ -12,6 +12,7 @@ batch fractions.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -31,6 +32,31 @@ MAX_DECODE_WAVE = 32
 
 def decode_wave(local_batch: float) -> int:
     return max(min(int(local_batch), MAX_DECODE_WAVE), 1)
+
+
+def predicted_occupancy(n_requests: float,
+                        wave: Optional[int] = None,
+                        gen_lens: Optional[Sequence[int]] = None) -> float:
+    """Predicted mean decode-slot occupancy under continuous batching.
+
+    This is the occupancy the cost model's ``C_hbm`` wave term assumes
+    and the number the genserve engine's measured slot-table trace is
+    compared against (Fig-7 style parity, decode-wave axis).
+
+    With uniform generation lengths every wave is full except the last
+    partial one: occupancy = n / ceil(n / W).  Given per-request lengths,
+    ideal continuous batching is bounded by the longest request and by
+    total work: steps >= max(max_len, ceil(sum_len / W)), and occupancy
+    is total tokens over that lower bound."""
+    W = wave if wave is not None else MAX_DECODE_WAVE
+    W = max(int(W), 1)
+    n = max(float(n_requests), 1.0)
+    if gen_lens is None:
+        return n / math.ceil(n / W)
+    lens = [max(int(l), 1) for l in gen_lens]
+    total = sum(lens)
+    steps = max(max(lens), math.ceil(total / W))
+    return total / steps
 
 
 @dataclasses.dataclass(frozen=True)

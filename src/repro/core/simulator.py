@@ -29,6 +29,11 @@ class Event:
     kind: str           # "start" | "end"
     iteration: int
     task: int
+    # decode-wave annotations (engine-measured GEN sub-events only): the
+    # wave round index and its mean active-slot occupancy.  None for
+    # task-level events — the simulator never fills these.
+    wave: Optional[int] = None
+    occupancy: Optional[float] = None
 
 
 @dataclasses.dataclass

@@ -24,7 +24,7 @@ from typing import Any, Dict, List, Optional, Sequence
 import jax
 
 from repro.core.costmodel import CostModel
-from repro.core.plan import Plan
+from repro.core.plan import Plan, predicted_occupancy
 from repro.core.simulator import Event, SimResult, simulate
 from repro.core.topology import Topology
 from repro.core.workflow import RLWorkflow, TaskKind
@@ -71,6 +71,17 @@ class Engine:
         self._iter = 0
         self._samples = 0
         self.timeline: List[Event] = []
+        # decode-wave sub-timeline (genserve): one start/end Event pair
+        # per wave round, annotated with measured slot occupancy.  Kept
+        # separate from `timeline` so task-level measured-vs-simulated
+        # parity is unaffected; times are host-monotonic relative to
+        # engine construction.
+        self.wave_timeline: List[Event] = []
+        self._wave_slot_steps = 0
+        self._wave_decode_steps = 0
+        self._wave_pred_sum = 0.0
+        self._wave_calls = 0
+        self._t0 = time.monotonic()
 
     # -- stage dispatch ------------------------------------------------
     def _lanes(self, stage: Sequence[int]) -> List[List[int]]:
@@ -155,6 +166,7 @@ class Engine:
                 before_stage([self.wf.task(t) for t in stage], bb)
             self._run_stage(stage, bb, durations)
             if has_gen:
+                self._record_gen_stats(bb)
                 bundle = self.pipeline.push(bb.pop("fresh"))
                 if bundle is None:
                     # pipeline fill: nothing to train on yet, no sync
@@ -175,6 +187,64 @@ class Engine:
         metrics["sync_gb"] = nbytes / 1e9
         events = self._replay_iteration(durations, sync_dur, trained=True)
         return EngineResult(metrics, events, self._iter - 1)
+
+    # -- decode-wave telemetry -------------------------------------------
+    def _record_gen_stats(self, bb: Dict[str, Any]) -> None:
+        """Fold the GEN executor's wave stats into metrics + the per-wave
+        Event sub-timeline (each wave round annotated with its measured
+        slot occupancy, comparable against the cost model's decode_wave
+        prediction)."""
+        stats = bb.pop("gen_stats", None)
+        if stats is None:
+            return
+        self._wave_slot_steps += int(stats["slot_steps"])
+        self._wave_decode_steps += int(stats["decode_steps"])
+        # ideal occupancy for the batch this executor actually ran (the
+        # engine folds all plan replicas onto the host, so the per-call
+        # request count — not the cost model's per-replica batch — is the
+        # like-for-like prediction baseline)
+        self._wave_pred_sum += predicted_occupancy(stats["admitted"],
+                                                   wave=stats["wave"])
+        self._wave_calls += 1
+        bb["metrics"].update({
+            "gen_wave": float(stats["wave"]),
+            "gen_wave_occupancy": float(stats["mean_occupancy"]),
+            "gen_decode_steps": float(stats["decode_steps"]),
+        })
+        rounds = stats.get("rounds") or []
+        if not rounds and stats["decode_steps"]:
+            # single-wave fast path: one synthesized zero-length wave
+            # round stamped now, keeping the sub-timeline monotonic
+            now = time.monotonic()
+            rounds = [(now, now, stats["mean_occupancy"], 0)]
+        for w, (t0, t1, occ, _adm) in enumerate(rounds):
+            self.wave_timeline.append(Event(
+                t0 - self._t0, "start", self._iter, self._gen_task,
+                wave=w, occupancy=occ))
+            self.wave_timeline.append(Event(
+                t1 - self._t0, "end", self._iter, self._gen_task,
+                wave=w, occupancy=occ))
+
+    def wave_occupancy_summary(self) -> Dict[str, float]:
+        """Measured mean decode-slot occupancy (over all iterations) vs
+        the ideal occupancy for the batches the engine actually ran.
+
+        ``predicted_occupancy`` is the engine-view ideal (whole rollout
+        batch, since the engine folds every plan replica onto the host);
+        ``predicted_occupancy_plan`` is the cost model's per-replica
+        figure for the GEN task on the reference pool — the two differ
+        exactly when the plan shards generation over dp > 1 replicas."""
+        measured = self._wave_slot_steps / max(self._wave_decode_steps, 1)
+        pred = self._wave_pred_sum / max(self._wave_calls, 1)
+        out = {"measured_occupancy": measured,
+               "measured_decode_steps": float(self._wave_decode_steps),
+               "predicted_occupancy": pred,
+               "ratio": measured / max(pred, 1e-9)}
+        if self.topo is not None:
+            cm = CostModel(self.topo, self.wf)
+            out["predicted_occupancy_plan"] = \
+                cm.gen_wave_occupancy(self.plan, self._gen_task)
+        return out
 
     # -- measured vs predicted -------------------------------------------
     def measured_result(self) -> SimResult:

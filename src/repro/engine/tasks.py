@@ -17,7 +17,9 @@ from typing import Callable, Dict, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import plan as plan_mod
 from repro.core.workflow import Task, TaskKind
+from repro.genserve import adapter as genserve
 from repro.rl import gae, losses
 from repro.rl import rewards as rewards_mod
 
@@ -46,10 +48,33 @@ def executor_for(task: Task) -> Callable:
 
 @register(TaskKind.GEN)
 def run_generation(st, bb, placement):
-    """Actor generation on the generation replica (pre-sync weights)."""
+    """Actor generation on the generation replica (pre-sync weights).
+
+    Routed through the continuous-batching engine (``repro.genserve``)
+    when the rollout batch exceeds the plan's decode wave, so
+    ``MAX_DECODE_WAVE`` semantics from the cost model are enforced at
+    execution time; a batch that fits in one wave takes the trainer's
+    jitted single-wave path (the genserve fast path).  Either way the
+    wave stats land in ``bb["gen_stats"]`` for the engine's per-wave
+    Event timeline."""
+    prompts = bb["prompts_rep"]
+    B = int(prompts.shape[0])
+    wave = plan_mod.decode_wave(B)
+    mode = getattr(st.rl, "gen_engine", "auto")
+    use_engine = mode == "genserve" or (mode == "auto" and B > wave)
     with placement.mesh:
-        ro = st._generate(st.gen_params, prompts=bb["prompts_rep"],
-                          rng=bb["rng"])
+        if use_engine:
+            ro, stats = genserve.generate(
+                st.gen_params, st.cfg, prompts, bb["rng"], st.sampler,
+                wave=wave, decode_chunk=getattr(st.rl, "decode_chunk", 1),
+                fast_path=False)
+        else:
+            ro = st._generate(st.gen_params, prompts=prompts,
+                              rng=bb["rng"])
+            # the single-wave path decodes all B rows at once — its wave
+            # width is B, whatever the cost model's bound says
+            stats = genserve.wave_stats_from_mask(ro["mask"])
+    bb["gen_stats"] = stats
     bb["fresh"] = {"rollout": ro, "answers_rep": bb["answers_rep"],
                    "gen_start": bb["gen_start"],
                    "gen_version": st.weight_version}

@@ -1,0 +1,44 @@
+"""Continuous-batching generation subsystem (vLLM-style bounded waves).
+
+HetRL's cost model prices generation as continuous batching in decode
+waves of at most ``core.plan.MAX_DECODE_WAVE`` sequences (the ``C_hbm``
+term divides KV streaming by the wave size).  This package makes that
+execution regime real: a request queue feeding at most ``wave`` active
+decode slots, jitted fixed-shape wave steps with an active-slot mask,
+retirement on EOS / budget, and prefill back-fill of freed slots — so the
+measured timeline and the model it is validated against finally describe
+the same machine.
+
+Slot lifecycle::
+
+        queue (FIFO)                          wave of W slots
+     ┌──────────────┐   admit (prefill      ┌────┬────┬────┬────┐
+     │ r7 r6 r5 r4  │ ─────────────────────▶│ r0 │ r1 │ r2 │ r3 │
+     └──────────────┘   inject + scatter)   └─┬──┴─┬──┴─┬──┴─┬──┘
+                                              │    │    │    │  decode step
+            ▲                                 ▼    ▼    ▼    ▼  (vmapped,
+            │                               tok  tok  EOS  tok   per-slot pos)
+            │         retire (EOS or budget) ────── r2 ──────┐
+            │                                                ▼
+            └─────────── freed slot back-filled ──── outputs[r2] complete
+
+    FREE ──admit──▶ ACTIVE ──emits tokens──▶ RETIRED(EOS | budget) ──▶ FREE
+
+Invariants:
+  * shapes are static — membership is masks/scatters, never recompiles;
+  * every slot carries its own cache position: recycled slots get exact
+    RoPE phases, ring-window validity and recurrent state (the per-slot
+    decode is a vmap of the B=1 ``transformer.decode_step``);
+  * admission replaces a slot's cache rows wholesale
+    (``models.cache.scatter_slots``) — no stale state can leak;
+  * EOS/validity semantics are shared with the single-wave reference
+    path through ``models.sampling`` (first EOS valid, everything after
+    masked, prompt-ends-with-EOS starts dead);
+  * when ``batch <= wave`` the engine's rng schedule equals
+    ``rl.rollout.generate``'s, so the reference path is reproduced
+    token-for-token (pinned by tests/test_genserve.py).
+"""
+from repro.genserve.adapter import generate, wave_stats_from_mask  # noqa: F401
+from repro.genserve.decoder import GenServeConfig, serve  # noqa: F401
+from repro.genserve.scheduler import (Request, RequestQueue,  # noqa: F401
+                                      SlotTable)

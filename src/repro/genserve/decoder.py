@@ -1,0 +1,291 @@
+"""Wave-stepped continuous-batching decode loop.
+
+Device-side execution is two jitted, fixed-shape programs per
+(model, engine-config, prompt-shape) triple:
+
+  * ``admit``  — prefill a [W, P] prompt batch, sample each admitted
+    request's first token, and scatter the fresh per-slot cache rows into
+    the wave cache (``models.cache.scatter_slots`` — whole-row
+    replacement, so recycled slots cannot see stale state);
+  * ``chunk``  — ``decode_chunk`` wave decode steps under ``lax.scan``:
+    each step runs a vmapped *per-slot* single-token decode (every slot
+    carries its own cache position, so RoPE phases, ring-buffer windows
+    and recurrent states stay exactly right for recycled slots), samples
+    the next token for the whole wave, records it into the per-request
+    output buffers, and retires slots that emitted EOS or hit their
+    budget.
+
+The host loop owns dynamic membership: it reads back the ``occupied``
+vector after every chunk, retires finished requests via the
+``scheduler.SlotTable``, and back-fills freed slots from the FIFO queue
+with another ``admit`` call.  All shapes stay static — membership changes
+are masks and scatters, never recompilation.
+
+RNG schedule: the first ``max_new_tokens`` sampling events use
+``jax.random.split(rng, max_new_tokens)`` — the exact schedule of
+``rl.rollout.generate`` — so a batch that fits into a single wave
+reproduces the reference path token-for-token.  Late admissions and
+overflow steps draw from a ``fold_in``-derived side stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.genserve.scheduler import Request, RequestQueue, SlotTable
+from repro.models import cache as cache_mod
+from repro.models import sampling
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class GenServeConfig:
+    """Engine knobs (hashable: keys the jit cache)."""
+
+    wave: int                        # max concurrently decoding slots (W)
+    max_new_tokens: int              # global budget N (output buffer width)
+    decode_chunk: int = 1            # decode steps per jitted host round
+    temperature: float = 1.0
+    eos_token: Optional[int] = None
+    greedy: bool = False
+
+    def validate(self) -> None:
+        assert self.wave >= 1 and self.max_new_tokens >= 1
+        assert self.decode_chunk >= 1
+
+
+# ---------------------------------------------------------------------------
+# Per-slot decode: vmap the single-sequence decode step over the wave.
+# Each slot is an independent B=1 decode with its own cache position —
+# this is what makes recycled slots (different positions in the same
+# wave) exact, including RoPE and ring-buffer slot validity.
+# ---------------------------------------------------------------------------
+
+def _wave_decode(params, cfg: ModelConfig, tok, pos, blocks):
+    """tok, pos: [W]; blocks: cache leaves [R, W, ...].
+    Returns (logits [W, V], new blocks)."""
+
+    def one_slot(tok_w, pos_w, slot_blocks):
+        cache = {"blocks": jax.tree_util.tree_map(lambda l: l[:, None],
+                                                  slot_blocks),
+                 "pos": pos_w}
+        logits, new = T.decode_step(params, cfg, tok_w[None, None], cache)
+        return logits[0], jax.tree_util.tree_map(lambda l: l[:, 0],
+                                                 new["blocks"])
+
+    return jax.vmap(one_slot, in_axes=(0, 0, 1), out_axes=(0, 1))(
+        tok, pos, blocks)
+
+
+# ---------------------------------------------------------------------------
+# Jitted engine programs (cached per (cfg, gcfg, P, n_reqs))
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=64)
+def _build_fns(cfg: ModelConfig, gcfg: GenServeConfig, prompt_len: int,
+               n_reqs: int):
+    N = gcfg.max_new_tokens
+    eos = gcfg.eos_token
+    dummy_row = n_reqs               # output buffers carry a scratch row
+
+    def sample(key, logits):
+        return sampling.sample_tokens(key, logits,
+                                      temperature=gcfg.temperature,
+                                      greedy=gcfg.greedy)
+
+    def admit(params, state, prompts, admit_mask, rows, limits, key):
+        """Prefill [W, P] prompts; install admitted slots; sample token 0."""
+        out = T.forward(params, cfg, {"tokens": prompts}, return_cache=True,
+                        max_cache_len=prompt_len + N, remat=False)
+        logits0 = out["logits"][:, -1]
+        tok0 = sample(key, logits0)
+        lp0 = sampling.token_logprobs(logits0, tok0)
+        alive0 = sampling.initial_alive(prompts, eos) & admit_mask
+        finished0 = limits <= 1
+        if eos is not None:
+            finished0 |= tok0 == eos
+
+        buf_rows = jnp.where(admit_mask, rows, dummy_row)
+        st = dict(state)
+        st["gen"] = state["gen"].at[buf_rows, 0].set(tok0)
+        st["lp"] = state["lp"].at[buf_rows, 0].set(lp0)
+        st["mask"] = state["mask"].at[buf_rows, 0].set(
+            alive0.astype(jnp.float32))
+        st["cache"] = cache_mod.scatter_slots(state["cache"],
+                                              out["cache"]["blocks"],
+                                              admit_mask)
+        st["pos"] = jnp.where(admit_mask, prompt_len, state["pos"])
+        st["tok"] = jnp.where(admit_mask, tok0, state["tok"])
+        st["ngen"] = jnp.where(admit_mask, 1, state["ngen"])
+        st["req"] = jnp.where(admit_mask, rows, state["req"])
+        st["limit"] = jnp.where(admit_mask, limits, state["limit"])
+        st["occupied"] = jnp.where(admit_mask, alive0 & ~finished0,
+                                   state["occupied"])
+        return st
+
+    def chunk(params, state, keys):
+        """`decode_chunk` wave steps; returns per-step active counts."""
+
+        def step(st, key):
+            logits, new_blocks = _wave_decode(params, cfg, st["tok"],
+                                              st["pos"], st["cache"])
+            nxt = sample(key, logits)
+            lp = sampling.token_logprobs(logits, nxt)
+            emit = st["occupied"]
+            buf_rows = jnp.where(emit, st["req"], dummy_row)
+            cols = jnp.where(emit, st["ngen"], 0)
+            alive_after = sampling.next_alive(emit, nxt, eos)
+            finished = emit & (~alive_after |
+                               (st["ngen"] + 1 >= st["limit"]))
+            st = dict(st)
+            st["gen"] = st["gen"].at[buf_rows, cols].set(nxt)
+            st["lp"] = st["lp"].at[buf_rows, cols].set(lp)
+            st["mask"] = st["mask"].at[buf_rows, cols].set(
+                emit.astype(jnp.float32))
+            st["cache"] = new_blocks
+            st["pos"] = jnp.where(emit, st["pos"] + 1, st["pos"])
+            st["tok"] = jnp.where(emit, nxt, st["tok"])
+            st["ngen"] = jnp.where(emit, st["ngen"] + 1, st["ngen"])
+            st["occupied"] = emit & ~finished
+            return st, jnp.sum(emit.astype(jnp.int32))
+
+        return jax.lax.scan(step, state, keys)
+
+    return jax.jit(admit), jax.jit(chunk)
+
+
+def _init_state(cfg: ModelConfig, gcfg: GenServeConfig, prompt_len: int,
+                n_reqs: int) -> Dict[str, object]:
+    W, N = gcfg.wave, gcfg.max_new_tokens
+    cache = cache_mod.init_cache(cfg, W, prompt_len + N,
+                                 dtype=jnp.dtype(cfg.dtype))
+    return {
+        "tok": jnp.zeros((W,), jnp.int32),
+        "pos": jnp.zeros((W,), jnp.int32),
+        "occupied": jnp.zeros((W,), bool),
+        "req": jnp.full((W,), n_reqs, jnp.int32),
+        "ngen": jnp.zeros((W,), jnp.int32),
+        "limit": jnp.ones((W,), jnp.int32),
+        "cache": cache["blocks"],
+        "gen": jnp.zeros((n_reqs + 1, N), jnp.int32),
+        "lp": jnp.zeros((n_reqs + 1, N), jnp.float32),
+        "mask": jnp.zeros((n_reqs + 1, N), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Host-driven engine loop
+# ---------------------------------------------------------------------------
+
+def serve(params, cfg: ModelConfig, prompts, rng, gcfg: GenServeConfig,
+          gen_lens: Optional[Sequence[int]] = None
+          ) -> Tuple[Dict[str, jnp.ndarray], Dict[str, object]]:
+    """Generate for all `prompts` [B, P] with continuous batching.
+
+    Returns (rollout dict — the exact `rl.rollout.generate` contract —
+    and an engine-stats dict with the per-round wave timeline and
+    occupancy trace).  `gen_lens` optionally caps each request's budget
+    (used by benchmarks to impose output-length distributions)."""
+    gcfg.validate()
+    prompts_np = np.asarray(prompts, np.int32)
+    B, P = prompts_np.shape
+    N, W = gcfg.max_new_tokens, gcfg.wave
+    K = min(gcfg.decode_chunk, N)
+
+    limits = np.full((B,), N, np.int64) if gen_lens is None \
+        else np.clip(np.asarray(gen_lens, np.int64), 1, N)
+    queue = RequestQueue([Request(i, int(limits[i])) for i in range(B)])
+    table = SlotTable(W)
+    admit_fn, chunk_fn = _build_fns(cfg, gcfg, P, B)
+    state = _init_state(cfg, gcfg, P, B)
+
+    # rngs[t] drives the t-th sampling event, mirroring rollout.generate:
+    # the first admission consumes rngs[0], decode step t consumes rngs[t].
+    rngs = jax.random.split(rng, N)
+    side = jax.random.fold_in(rng, 0x5EED)
+    side_admit = jax.random.fold_in(side, 0)    # late-admission sampling
+    side_step = jax.random.fold_in(side, 1)     # decode steps beyond rngs
+    next_key = 0
+    rounds: List[Tuple[float, float, float, int]] = []
+    n_prefills = 0
+    round_idx = 0
+    occupied = np.zeros((W,), bool)      # device occupancy, host view
+    while len(queue) or table.active:
+        round_idx += 1
+        assert round_idx <= 2 * B * (N + 1), "genserve loop did not converge"
+        t0 = time.monotonic()
+        admitted = 0
+        may_live = False
+        free = table.free_slots()
+        if free and len(queue):
+            reqs = queue.pop(len(free))
+            slots = free[:len(reqs)]
+            pb = np.broadcast_to(prompts_np[reqs[0].rid],
+                                 (W, P)).copy()
+            admit_mask = np.zeros((W,), bool)
+            rows = np.full((W,), B, np.int32)
+            lim = np.ones((W,), np.int32)
+            for s, rq in zip(slots, reqs):
+                pb[s] = prompts_np[rq.rid]
+                admit_mask[s] = True
+                rows[s] = rq.rid
+                lim[s] = rq.max_new_tokens
+            key = rngs[0] if next_key == 0 \
+                else jax.random.fold_in(side_admit, round_idx)
+            state = admit_fn(params, state, pb, admit_mask, rows, lim, key)
+            table.admit(slots, reqs)
+            next_key = max(next_key, 1)
+            n_prefills += 1
+            admitted = len(reqs)
+            # host-side liveness bound — a synced read of `occupied`
+            # here would serialize admission against the decode chunk;
+            # this is conservative only for first-token EOS (one chunk
+            # of bounded waste in that rare case)
+            may_live = any(
+                rq.max_new_tokens > 1
+                and (gcfg.eos_token is None
+                     or prompts_np[rq.rid, -1] != gcfg.eos_token)
+                for rq in reqs)
+
+        counts = ()
+        if occupied.any() or may_live:
+            # decode only when a slot can be occupied: requests that
+            # finished at admission (budget 1, prompt-dead) never burn
+            # wave steps
+            keys = jnp.stack(
+                [rngs[i] if i < N else jax.random.fold_in(side_step, i)
+                 for i in range(next_key, next_key + K)])
+            state, counts = chunk_fn(params, state, keys)
+            next_key += K
+            counts = np.asarray(counts)
+            table.record_step(counts)
+            occupied = np.asarray(state["occupied"])
+
+        table.retire_finished(occupied)
+        t1 = time.monotonic()
+        occ = float(np.mean(counts)) if len(counts) else 0.0
+        rounds.append((t0, t1, occ, admitted))
+
+    gen = np.asarray(state["gen"])[:B]
+    lp = np.asarray(state["lp"])[:B]
+    mask = np.asarray(state["mask"])[:B]
+    res = {"sequences": jnp.concatenate(
+               [jnp.asarray(prompts_np), jnp.asarray(gen)], axis=1),
+           "gen_tokens": jnp.asarray(gen),
+           "logprobs": jnp.asarray(lp),
+           "mask": jnp.asarray(mask)}
+    stats = {"engine": "genserve", "wave": W,
+             "decode_steps": table.decode_steps,
+             "slot_steps": table.slot_steps,
+             "mean_occupancy": table.mean_occupancy(),
+             "occupancy_trace": list(table.occupancy_trace),
+             "rounds": rounds, "prefills": n_prefills,
+             "admitted": table.admitted, "retired": table.retired}
+    return res, stats

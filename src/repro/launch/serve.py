@@ -1,8 +1,13 @@
-"""Serving launcher: batched prefill + decode for any --arch (smoke scale
-on CPU; the full-scale path is exercised via the dry-run).
+"""Serving launcher: continuous-batching generation for any --arch
+(smoke scale on CPU; the full-scale path is exercised via the dry-run).
+
+Requests stream through the genserve engine: at most --wave sequences
+decode concurrently, finished slots (EOS or budget) are recycled via
+prefill injection, and the report includes tokens/s plus the measured
+mean decode-wave occupancy next to the cost model's ideal.
 
     PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b --smoke \
-        --batch 4 --prompt-len 32 --new-tokens 16
+        --batch 16 --wave 4 --prompt-len 32 --new-tokens 16
 """
 from __future__ import annotations
 
@@ -13,9 +18,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import archs
+from repro.core.plan import decode_wave, predicted_occupancy
+from repro.genserve import adapter as genserve
 from repro.launch.mesh import make_host_mesh
 from repro.models import transformer as T
-from repro.models.sampling import greedy_decode
+from repro.rl.rollout import SamplerConfig
 
 
 def main():
@@ -25,6 +32,14 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--wave", type=int, default=0,
+                    help="decode slots (0 = core.plan.decode_wave(batch))")
+    ap.add_argument("--decode-chunk", type=int, default=4,
+                    help="decode steps per host round")
+    ap.add_argument("--eos-token", type=int, default=None,
+                    help="retire sequences on this token id")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy")
     args = ap.parse_args()
 
     cfg = archs.get(args.arch, smoke=args.smoke)
@@ -36,15 +51,31 @@ def main():
     params = T.init_params(key, cfg)
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size, jnp.int32)
+    wave = args.wave or decode_wave(args.batch)
+    sampler = SamplerConfig(max_new_tokens=args.new_tokens,
+                            temperature=args.temperature,
+                            eos_token=args.eos_token,
+                            greedy=args.temperature <= 0)
     with mesh:
+        gen = lambda: genserve.generate(params, cfg, prompts,
+                                        jax.random.PRNGKey(1), sampler,
+                                        wave=wave, fast_path=False,
+                                        decode_chunk=args.decode_chunk)
+        gen()            # warm-up: compile the admit/chunk programs
         t0 = time.time()
-        toks = greedy_decode(params, cfg, prompts, args.new_tokens)
-        toks.block_until_ready()
+        ro, stats = gen()
+        jax.block_until_ready(ro["sequences"])
         dt = time.time() - t0
-    tps = args.batch * args.new_tokens / dt
-    print(f"arch={cfg.name} generated {toks.shape} in {dt:.2f}s "
-          f"({tps:.1f} tok/s)")
-    print("sample:", toks[0, :24].tolist())
+    valid = float(jnp.sum(ro["mask"]))
+    ideal = predicted_occupancy(args.batch, wave=wave)
+    print(f"arch={cfg.name} engine={stats['engine']} wave={stats['wave']} "
+          f"batch={args.batch}")
+    print(f"generated {ro['gen_tokens'].shape} in {dt:.2f}s "
+          f"({valid / dt:.1f} valid tok/s; {stats['decode_steps']} decode "
+          f"steps, {stats['prefills']} prefill injections)")
+    print(f"mean wave occupancy: {stats['mean_occupancy']:.2f} "
+          f"(cost-model ideal {ideal:.2f})")
+    print("sample:", ro["sequences"][0, :24].tolist())
 
 
 if __name__ == "__main__":

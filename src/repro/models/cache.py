@@ -1,6 +1,13 @@
 """Decode-time state: KV caches (full + ring-buffer windowed), SSM states,
 RWKV states.  Cache leaves for the scanned layer stack carry a leading
 [R] repeats dim so decode can scan over blocks with per-repeat cache slices.
+
+Every block-cache leaf is laid out ``[R, B, ...]`` with the batch (decode
+*slot*) dim at axis 1; ``gather_slots`` / ``scatter_slots`` exploit this
+to move whole per-slot cache rows in and out, which is what the
+continuous-batching engine (``repro.genserve``) uses to recycle decode
+slots: a retired slot's rows are simply overwritten by the freshly
+prefilled rows of the next request.
 """
 from __future__ import annotations
 
@@ -56,6 +63,30 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int, *,
             layer["cm_shift"] = jnp.zeros((R, batch, cfg.d_model), dtype)
         blocks[f"layer{j}"] = layer
     return {"blocks": blocks, "pos": jnp.zeros((), jnp.int32)}
+
+
+def _slot_axes_mask(mask, leaf):
+    """Broadcast a [B]-shaped slot mask over a [R, B, ...] cache leaf."""
+    return mask.reshape((1, mask.shape[0]) + (1,) * (leaf.ndim - 2))
+
+
+def gather_slots(blocks, idx):
+    """Extract per-slot cache rows: leaves [R, B, ...] -> [R, len(idx), ...].
+
+    `idx` is an int array of slot indices; works under jit (idx traced)."""
+    return jax.tree_util.tree_map(lambda l: jnp.take(l, idx, axis=1), blocks)
+
+
+def scatter_slots(dst_blocks, src_blocks, slot_mask):
+    """Overwrite slot rows of `dst_blocks` with `src_blocks` where
+    `slot_mask` [B] is True.  Both pytrees have leaves [R, B, ...]; this
+    is the whole-row replacement the genserve engine performs at prefill
+    injection, so no stale KV/SSM state from the previous occupant can
+    leak into a recycled slot."""
+    return jax.tree_util.tree_map(
+        lambda dst, src: jnp.where(_slot_axes_mask(slot_mask, dst),
+                                   src.astype(dst.dtype), dst),
+        dst_blocks, src_blocks)
 
 
 def ring_slot_positions(cache_len: int, window: Optional[int], pos):

@@ -1,31 +1,56 @@
-"""Standalone decoding helpers (serving path)."""
+"""Shared token-sampling and EOS/aliveness helpers.
+
+Both decode paths — the single-wave reference (`rl.rollout.generate`) and
+the continuous-batching engine (`repro.genserve`) — sample tokens and
+track sequence aliveness with these helpers so their masking semantics
+cannot drift apart.
+
+Aliveness contract (shared by rollout and genserve):
+  * a sequence starts alive unless its prompt already ends with EOS
+    (the model finished before generating anything);
+  * the first emitted EOS token is itself *valid* (mask 1) — the
+    sequence dies after emitting it, so every later position is invalid.
+"""
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.models import transformer as T
-from repro.models.config import ModelConfig
+
+def sample_tokens(rng, logits, *, temperature: float = 1.0,
+                  greedy: bool = False):
+    """logits [..., V] -> int32 token ids (argmax or categorical)."""
+    if greedy or temperature <= 0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        rng, logits.astype(jnp.float32) / temperature, axis=-1) \
+        .astype(jnp.int32)
 
 
-def greedy_decode(params, cfg: ModelConfig, prompts, n_new: int,
-                  long_mode: bool = False):
-    """prompts: [B, P] -> generated tokens [B, n_new] (greedy)."""
-    B, P = prompts.shape
-    out = T.forward(params, cfg, {"tokens": prompts}, return_cache=True,
-                    max_cache_len=P + n_new, remat=False,
-                    long_mode=long_mode)
-    cache = out["cache"]
-    tok = jnp.argmax(out["logits"][:, -1], axis=-1).astype(jnp.int32)
+def token_logprobs(logits, tokens):
+    """Log-probabilities of `tokens` [...]. under `logits` [..., V]."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return jnp.take_along_axis(logp, tokens[..., None], axis=-1)[..., 0]
 
-    def step(carry, _):
-        cache, tok = carry
-        logits, cache = T.decode_step(params, cfg, tok[:, None], cache,
-                                      long_mode=long_mode)
-        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return (cache, nxt), tok
 
-    (_, last), toks = jax.lax.scan(step, (cache, tok), None,
-                                   length=n_new - 1)
-    return jnp.concatenate([toks.T, last[:, None]], axis=1) \
-        if n_new > 1 else tok[:, None]
+def initial_alive(prompts, eos_token: Optional[int]):
+    """[B] bool: alive at generation start.
+
+    A prompt whose last token is already EOS produced a finished
+    sequence — its first sampled token (and everything after) is
+    invalid."""
+    if eos_token is None:
+        return jnp.ones((prompts.shape[0],), bool)
+    return prompts[:, -1] != eos_token
+
+
+def next_alive(alive, emitted, eos_token: Optional[int]):
+    """Aliveness after emitting `emitted` [B]: dies on (its own) EOS.
+
+    The emitted EOS is still valid under `alive`; only subsequent
+    positions are masked."""
+    if eos_token is None:
+        return alive
+    return alive & (emitted != eos_token)

@@ -3,6 +3,14 @@
 Prefill the prompt once (forward with return_cache), then lax.scan over
 decode steps.  Returns sequences, per-token logprobs and the validity mask
 (positions after EOS are masked out).
+
+This is the *single-wave* reference path: every sequence decodes all
+``max_new_tokens`` steps, finished-or-not (dead rows are masked, not
+retired).  The continuous-batching engine (``repro.genserve``) retires
+finished slots and back-fills them from a request queue; when the batch
+fits in one decode wave the two paths produce identical masked outputs
+under the same rng (genserve's equivalence tests pin this).  EOS and mask
+semantics are shared via ``models.sampling``.
 """
 from __future__ import annotations
 
@@ -12,6 +20,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.models import sampling
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 
@@ -25,11 +34,8 @@ class SamplerConfig:
 
 
 def _sample(rng, logits, cfg: SamplerConfig):
-    if cfg.greedy or cfg.temperature <= 0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    return jax.random.categorical(
-        rng, logits.astype(jnp.float32) / cfg.temperature, axis=-1) \
-        .astype(jnp.int32)
+    return sampling.sample_tokens(rng, logits, temperature=cfg.temperature,
+                                  greedy=cfg.greedy)
 
 
 def generate(params, cfg: ModelConfig, prompts, rng,
@@ -45,27 +51,24 @@ def generate(params, cfg: ModelConfig, prompts, rng,
 
     rngs = jax.random.split(rng, N)
     tok0 = _sample(rngs[0], logits0, sampler)
-    logp0 = jax.nn.log_softmax(logits0.astype(jnp.float32), axis=-1)
-    lp0 = jnp.take_along_axis(logp0, tok0[:, None], axis=-1)[:, 0]
+    lp0 = sampling.token_logprobs(logits0, tok0)
 
     def step(carry, rng_t):
         cache, tok, alive = carry
         logits, cache = T.decode_step(params, cfg, tok[:, None], cache)
         nxt = _sample(rng_t, logits, sampler)
-        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
-        lp = jnp.take_along_axis(logp, nxt[:, None], axis=-1)[:, 0]
-        if sampler.eos_token is not None:
-            alive_next = alive & (tok != sampler.eos_token)
-        else:
-            alive_next = alive
+        lp = sampling.token_logprobs(logits, nxt)
+        alive_next = sampling.next_alive(alive, tok, sampler.eos_token)
         return (cache, nxt, alive_next), (nxt, lp, alive_next)
 
-    alive0 = jnp.ones((B,), bool)
+    # a prompt that already ends with EOS starts dead: its first sampled
+    # token is recorded but invalid (shared edge semantics with genserve)
+    alive0 = sampling.initial_alive(prompts, sampler.eos_token)
     (_, _, _), (toks, lps, alives) = jax.lax.scan(
         step, (cache, tok0, alive0), rngs[1:])
     gen = jnp.concatenate([tok0[:, None], toks.T], axis=1)       # [B, N]
     logprobs = jnp.concatenate([lp0[:, None], lps.T], axis=1)
-    mask = jnp.concatenate([jnp.ones((B, 1), bool), alives.T], axis=1)
+    mask = jnp.concatenate([alive0[:, None], alives.T], axis=1)
     sequences = jnp.concatenate([prompts, gen], axis=1)
     return {"sequences": sequences, "gen_tokens": gen,
             "logprobs": logprobs, "mask": mask.astype(jnp.float32)}

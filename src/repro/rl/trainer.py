@@ -50,6 +50,12 @@ class RLConfig:
     # overlaps training on iteration t's rollouts (§2.1); the PPO ratio
     # absorbs the one-step staleness of logp_old
     asynchronous: bool = False
+    # GEN executor routing: "auto" takes the jitted single-wave path when
+    # the rollout batch fits in one decode wave and the continuous-
+    # batching engine (repro.genserve) beyond it; "rollout"/"genserve"
+    # force a path
+    gen_engine: str = "auto"
+    decode_chunk: int = 1            # genserve decode steps per host round
 
 
 def default_plan(wf: workflow.RLWorkflow, n_devices: Optional[int] = None):

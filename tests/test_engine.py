@@ -144,22 +144,24 @@ def test_colocated_plan_serializes_everything():
 
 def test_disaggregated_plan_overlaps_groups():
     """The plan demonstrably changes execution: with gen | rest groups,
-    the reward/reference lane starts while the generation group's devices
-    are still considered busy only by generation — i.e., inference tasks
-    start exactly at generation end, not after a whole-pool barrier."""
+    inference starts exactly when generation ends (its only dependency),
+    not later — there is no whole-pool barrier between the groups — and
+    the colocated reward/reference pair serializes back-to-back inside
+    its lane."""
     trainer, topo, plan = disaggregated_setup()
     run_iters(trainer, 3)
     iv = intervals(trainer.engine.measured_result().timeline)
     gen_devs = {int(d) for d in plan.assignment[0].reshape(-1)}
     inf_devs = {int(d) for d in plan.assignment[1].reshape(-1)}
     assert not gen_devs & inf_devs
-    # iteration 1's generation may start before iteration 0's training
-    # ends? (sync mode: no). But reward (1) and reference (2) share the
-    # non-gen group -> they serialize; check both start after gen end and
-    # reward/reference do not overlap each other.
     for it in range(3):
         s1, e1 = iv[(it, 1)]
         s2, e2 = iv[(it, 2)]
+        # reward becomes ready at gen end and its (disjoint) device
+        # group is idle by then: any later start would be a barrier
+        assert s1 == pytest.approx(iv[(it, 0)][1], abs=1e-9)
+        # colocated lane: reference starts exactly at reward end
+        assert s2 == pytest.approx(e1, abs=1e-9)
         assert e1 <= s2 + 1e-12 or e2 <= s1 + 1e-12
 
 

@@ -1,0 +1,259 @@
+"""Continuous-batching generation subsystem tests.
+
+- single-wave equivalence: batch <= wave, same rng -> genserve reproduces
+  ``rollout.generate`` token-for-token (valid positions; sampled and
+  greedy, chunked and unchunked);
+- slot-recycling correctness: batch >> wave under greedy decoding ->
+  every recycled request's output equals the single-wave reference
+  (per-slot cache positions, scatter injection, ring windows);
+- EOS edge: a prompt already ending in EOS yields an all-invalid mask on
+  both paths (the shared ``models.sampling`` aliveness helper);
+- occupancy parity: uniform lengths -> measured slot-table occupancy
+  equals ``core.plan`` predictions exactly; skewed budgets stay within
+  the ideal bound;
+- engine integration: the TaskKind.GEN executor produces per-wave Event
+  timeline entries comparable against the cost model's decode_wave.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import plan as plan_mod
+from repro.data.synthetic import AdditionTask, EOS, VOCAB_SIZE
+from repro.genserve import adapter as genserve
+from repro.genserve.decoder import GenServeConfig, serve
+from repro.genserve.scheduler import FREE, Request, RequestQueue, SlotTable
+from repro.models import transformer as T
+from repro.models.config import LayerSpec, ModelConfig
+from repro.rl import rollout
+from repro.rl.trainer import RLConfig, RLTrainer
+
+KEY = jax.random.PRNGKey(0)
+P, N = 8, 6
+
+
+def tiny_cfg(window=None):
+    return ModelConfig(name=f"gs-tiny-w{window}", n_layers=2, d_model=64,
+                       n_heads=2, n_kv_heads=2, head_dim=32, d_ff=128,
+                       vocab_size=VOCAB_SIZE, dtype="float32",
+                       pattern=(LayerSpec(window=window),))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = tiny_cfg()
+    return cfg, T.init_params(KEY, cfg)
+
+
+def prompts_for(n, key=3, cfg=None):
+    return jax.random.randint(jax.random.PRNGKey(key), (n, P), 0,
+                              (cfg or tiny_cfg()).vocab_size, jnp.int32)
+
+
+def assert_rollout_equal(ref, got, atol=1e-4):
+    mr, mg = np.asarray(ref["mask"]), np.asarray(got["mask"])
+    np.testing.assert_array_equal(mr, mg)
+    np.testing.assert_array_equal(
+        np.asarray(ref["gen_tokens"]) * mr.astype(np.int32),
+        np.asarray(got["gen_tokens"]) * mg.astype(np.int32))
+    np.testing.assert_allclose(np.asarray(ref["logprobs"]) * mr,
+                               np.asarray(got["logprobs"]) * mg,
+                               rtol=1e-4, atol=atol)
+    np.testing.assert_array_equal(
+        np.asarray(ref["sequences"])[:, :P], np.asarray(got["sequences"])[:, :P])
+
+
+@pytest.mark.parametrize("chunk", [1, 3])
+def test_single_wave_equivalence_sampled(setup, chunk):
+    """batch == wave, same rng -> identical sequences/logprobs/mask."""
+    cfg, params = setup
+    prompts = prompts_for(4)
+    sampler = rollout.SamplerConfig(max_new_tokens=N, temperature=1.0,
+                                    eos_token=EOS)
+    ref = rollout.generate(params, cfg, prompts, jax.random.PRNGKey(7),
+                           sampler)
+    gcfg = GenServeConfig(wave=4, max_new_tokens=N, decode_chunk=chunk,
+                          eos_token=EOS)
+    got, stats = serve(params, cfg, prompts, jax.random.PRNGKey(7), gcfg)
+    assert_rollout_equal(ref, got)
+    assert stats["prefills"] == 1 and stats["admitted"] == 4
+
+
+def test_single_wave_equivalence_greedy_padded_wave(setup):
+    """batch < wave: padded prefill rows must not disturb real requests."""
+    cfg, params = setup
+    prompts = prompts_for(3)
+    sampler = rollout.SamplerConfig(max_new_tokens=N, greedy=True,
+                                    eos_token=EOS)
+    ref = rollout.generate(params, cfg, prompts, jax.random.PRNGKey(2),
+                           sampler)
+    gcfg = GenServeConfig(wave=5, max_new_tokens=N, greedy=True,
+                          eos_token=EOS)
+    got, _ = serve(params, cfg, prompts, jax.random.PRNGKey(2), gcfg)
+    assert_rollout_equal(ref, got)
+
+
+@pytest.mark.parametrize("window", [None, 4])
+def test_slot_recycling_matches_reference(window):
+    """batch >> wave, greedy: recycled slots (fresh cache rows, per-slot
+    positions — including ring-buffer windows) reproduce the single-wave
+    reference for every request."""
+    cfg = tiny_cfg(window=window)
+    params = T.init_params(KEY, cfg)
+    prompts = prompts_for(14, key=5, cfg=cfg)
+    sampler = rollout.SamplerConfig(max_new_tokens=N, greedy=True,
+                                    eos_token=3)
+    ref = rollout.generate(params, cfg, prompts, jax.random.PRNGKey(1),
+                           sampler)
+    gcfg = GenServeConfig(wave=4, max_new_tokens=N, greedy=True, eos_token=3)
+    got, stats = serve(params, cfg, prompts, jax.random.PRNGKey(1), gcfg)
+    assert_rollout_equal(ref, got)
+    assert stats["admitted"] == stats["retired"] == 14
+    assert stats["prefills"] >= 2          # slots were actually recycled
+    assert stats["wave"] == 4
+    assert max(stats["occupancy_trace"]) <= 4
+
+
+def test_prompt_ending_in_eos_starts_dead(setup):
+    """Shared EOS edge: prompt's last token == EOS -> whole mask invalid
+    on both the reference path and genserve."""
+    cfg, params = setup
+    prompts = np.array(prompts_for(4))
+    prompts[1, -1] = EOS
+    prompts[3, -1] = EOS
+    sampler = rollout.SamplerConfig(max_new_tokens=N, eos_token=EOS)
+    ref = rollout.generate(params, cfg, jnp.asarray(prompts),
+                           jax.random.PRNGKey(4), sampler)
+    gcfg = GenServeConfig(wave=4, max_new_tokens=N, eos_token=EOS)
+    got, _ = serve(params, cfg, prompts, jax.random.PRNGKey(4), gcfg)
+    for out in (ref, got):
+        m = np.asarray(out["mask"])
+        assert m[1].sum() == 0 and m[3].sum() == 0
+        assert m[0, 0] == 1 and m[2, 0] == 1
+    assert_rollout_equal(ref, got)
+
+
+def test_per_request_budgets_and_skewed_occupancy(setup):
+    """gen_lens caps each request; measured occupancy stays within the
+    ideal continuous-batching bound from core.plan.predicted_occupancy."""
+    cfg, params = setup
+    B, W = 12, 4
+    lens = [1, 1, 2, 2, 3, 3, N, N, N, N, N, N]
+    prompts = prompts_for(B, key=9)
+    gcfg = GenServeConfig(wave=W, max_new_tokens=N, greedy=True)
+    got, stats = serve(params, cfg, prompts, KEY, gcfg, gen_lens=lens)
+    np.testing.assert_array_equal(np.asarray(got["mask"]).sum(1), lens)
+    ideal = plan_mod.predicted_occupancy(B, wave=W, gen_lens=lens)
+    assert 0 < stats["mean_occupancy"] <= ideal + 1e-9
+    # genserve does strictly less decode work than ceil(B/W) full waves
+    assert stats["decode_steps"] < int(np.ceil(B / W)) * N
+
+
+def test_no_decode_steps_when_all_finish_at_admission(setup):
+    """Budget-1 requests finish with their prefill-sampled token; the
+    engine must not burn any wave decode steps on them."""
+    cfg, params = setup
+    prompts = prompts_for(8, key=13)
+    gcfg = GenServeConfig(wave=4, max_new_tokens=N, greedy=True,
+                          decode_chunk=3)
+    got, stats = serve(params, cfg, prompts, KEY, gcfg,
+                       gen_lens=[1] * 8)
+    np.testing.assert_array_equal(np.asarray(got["mask"]).sum(1),
+                                  np.ones(8))
+    assert stats["decode_steps"] == 0
+    assert stats["prefills"] == 2 and stats["retired"] == 8
+
+
+def test_uniform_occupancy_matches_decode_wave(setup):
+    """No EOS, uniform budgets: every wave is full -> measured slot-table
+    occupancy equals the cost model's decode_wave exactly."""
+    cfg, params = setup
+    B, W = 12, 4
+    prompts = prompts_for(B, key=11)
+    gcfg = GenServeConfig(wave=W, max_new_tokens=N, greedy=True)
+    got, stats = serve(params, cfg, prompts, KEY, gcfg)
+    assert np.asarray(got["mask"]).sum() == B * N
+    assert stats["mean_occupancy"] == pytest.approx(
+        plan_mod.predicted_occupancy(B, wave=W))
+    assert stats["mean_occupancy"] == pytest.approx(
+        float(plan_mod.decode_wave(B * W / B)))  # = W: full waves
+
+
+def test_cache_gather_scatter_roundtrip():
+    """[R, B, ...] cache rows move wholesale: scatter(src at mask) then
+    gather returns src rows exactly; unmasked rows untouched."""
+    from repro.models import cache as cache_mod
+    rng = np.random.default_rng(0)
+    blocks = {"layer0": {"k": jnp.asarray(rng.normal(size=(2, 4, 3, 2, 5)),
+                                          jnp.float32),
+                         "conv": jnp.asarray(rng.normal(size=(2, 4, 7)),
+                                             jnp.float32)}}
+    src = jax.tree_util.tree_map(lambda l: l + 100.0, blocks)
+    mask = jnp.asarray([True, False, True, False])
+    out = cache_mod.scatter_slots(blocks, src, mask)
+    got = cache_mod.gather_slots(out, jnp.asarray([0, 2]))
+    want = cache_mod.gather_slots(src, jnp.asarray([0, 2]))
+    kept = cache_mod.gather_slots(out, jnp.asarray([1, 3]))
+    orig = cache_mod.gather_slots(blocks, jnp.asarray([1, 3]))
+    for a, b in ((got, want), (kept, orig)):
+        for la, lb in zip(jax.tree_util.tree_leaves(a),
+                          jax.tree_util.tree_leaves(b)):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_scheduler_slot_table_invariants():
+    table = SlotTable(3)
+    q = RequestQueue([Request(i, 4) for i in range(5)])
+    reqs = q.pop(len(table.free_slots()))
+    table.admit(table.free_slots(), reqs)
+    assert table.active == 3 and len(q) == 2
+    with pytest.raises(AssertionError):
+        table.admit([0], q.pop(1))           # slot already occupied
+    done = table.retire_finished(np.array([True, False, True]))
+    assert done == [1] and table.active == 2
+    assert table.slot_req[1] == FREE
+    table.record_step([3, 2, 2])
+    assert table.decode_steps == 3 and table.slot_steps == 7
+    assert table.mean_occupancy() == pytest.approx(7 / 3)
+
+
+def test_adapter_fast_path_stats(setup):
+    cfg, params = setup
+    prompts = prompts_for(4)
+    sampler = rollout.SamplerConfig(max_new_tokens=N, eos_token=EOS)
+    ro, stats = genserve.generate(params, cfg, prompts,
+                                  jax.random.PRNGKey(7), sampler, wave=8)
+    assert stats["engine"] == "single-wave"
+    assert stats["decode_steps"] == N
+    assert stats["slot_steps"] == int(np.asarray(ro["mask"]).sum())
+    ref = rollout.generate(params, cfg, prompts, jax.random.PRNGKey(7),
+                           sampler)
+    assert_rollout_equal(ref, ro)
+
+
+def test_engine_gen_executor_emits_wave_events():
+    """TaskKind.GEN through genserve: per-wave Event entries with
+    occupancy annotations, comparable against decode_wave predictions."""
+    cfg = tiny_cfg()
+    task = AdditionTask(max_operand=9)
+    rl = RLConfig(algorithm="grpo", n_rollouts=4, max_new_tokens=4,
+                  gen_engine="genserve", decode_chunk=2)
+    trainer = RLTrainer(cfg, rl, task, KEY)
+    rng = np.random.default_rng(0)
+    key = jax.random.PRNGKey(7)
+    for _ in range(2):
+        prompts, answers = task.sample_batch(rng, 3)
+        key, k = jax.random.split(key)
+        m = trainer.iteration(prompts, answers, k)
+    assert m["gen_wave"] >= 1
+    assert 0 < m["gen_wave_occupancy"] <= m["gen_wave"]
+    events = trainer.engine.wave_timeline
+    assert events and all(e.occupancy is not None and e.wave is not None
+                          for e in events)
+    assert {e.kind for e in events} == {"start", "end"}
+    assert {e.iteration for e in events} == {0, 1}
+    summary = trainer.engine.wave_occupancy_summary()
+    assert summary["measured_occupancy"] > 0
+    assert summary["predicted_occupancy"] > 0
+    assert np.isfinite(summary["ratio"])
