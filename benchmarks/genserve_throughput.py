@@ -9,6 +9,17 @@ while genserve retires finished slots and back-fills them from the
 queue.  Also reports measured mean wave occupancy next to the ideal
 continuous-batching occupancy from ``core.plan.predicted_occupancy``.
 
+Decode-path axis: the jitted wave-step latency per execution path —
+``vmapped-per-slot`` (the legacy W-way vmap of a B=1 decode_step),
+``batched-jnp`` (one natively batched decode_step with per-slot cache
+positions — the fast path this repo now defaults to) and
+``batched-pallas-interpret`` (the same batched step routed through the
+Sq == 1 flash-decode Pallas kernel in interpreter mode — a lowering /
+parity axis on CPU; the compiled-TPU configuration is the perf target).
+Alternating A/B repetitions with a median cut through container timing
+noise; the per-slot cache positions are drawn from each distribution so
+recycled-slot raggedness is represented.
+
 Writes both the benchmark CSV and ``results/genserve_throughput.json``.
 """
 from __future__ import annotations
@@ -16,6 +27,7 @@ from __future__ import annotations
 import functools
 import json
 import os
+import statistics
 import time
 
 import jax
@@ -24,6 +36,8 @@ import numpy as np
 
 from repro.core.plan import MAX_DECODE_WAVE, predicted_occupancy
 from repro.genserve import adapter as genserve
+from repro.genserve import decoder as gs_decoder
+from repro.models import attention as attn_mod
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.rl import rollout
@@ -48,6 +62,53 @@ def _lengths(dist: str, B: int, N: int, rng: np.random.Generator):
     if dist == "long-tail":
         return np.minimum(rng.geometric(3.0 / N, B), N)
     raise ValueError(dist)
+
+
+def _decode_path_axis(cfg, params, wave, P, N, lens, *, quick):
+    """Median jitted wave-step latency per decode path (alternating A/B).
+
+    The wave state is mid-stream: every slot occupied, per-slot cache
+    positions spread per the imposed length distribution (recycled-slot
+    raggedness included).  Paths share the state, so the axis isolates
+    the decode-step program itself."""
+    gcfg0 = gs_decoder.GenServeConfig(wave=wave, max_new_tokens=N)
+    state = gs_decoder._init_state(cfg, gcfg0, P, len(lens))
+    rng = np.random.default_rng(0)
+    progress = rng.integers(0, np.maximum(lens[:wave], 1))
+    state = dict(state,
+                 occupied=jnp.ones((wave,), bool),
+                 pos=jnp.asarray(P + progress, jnp.int32),
+                 limit=jnp.full((wave,), N, jnp.int32))
+    keys = jax.random.split(jax.random.PRNGKey(9), 1)
+
+    paths = (("vmapped-per-slot", "vmapped", "jnp"),
+             ("batched-jnp", "batched", "jnp"),
+             ("batched-pallas-interpret", "batched", "pallas"))
+    fns = {}
+    prev_impl = attn_mod.get_attention_impl()
+    for label, decode_path, impl in paths:
+        gcfg = gs_decoder.GenServeConfig(wave=wave, max_new_tokens=N,
+                                         greedy=True,
+                                         decode_path=decode_path)
+        try:
+            attn_mod.set_attention_impl(impl)
+            _, chunk_fn = gs_decoder._build_fns(cfg, gcfg, P, len(lens),
+                                                impl)
+            _, c = chunk_fn(params, state, keys)       # trace + compile
+            jax.block_until_ready(c)
+        finally:
+            attn_mod.set_attention_impl(prev_impl)
+        fns[label] = chunk_fn
+
+    reps = 10 if quick else 30
+    times = {label: [] for label, *_ in paths}
+    for _ in range(reps):
+        for label, f in fns.items():
+            t0 = time.monotonic()
+            _, c = f(params, state, keys)
+            jax.block_until_ready(c)
+            times[label].append(time.monotonic() - t0)
+    return {label: statistics.median(ts) for label, ts in times.items()}
 
 
 def _single_wave(gen, params, prompts, wave):
@@ -90,8 +151,9 @@ def run(quick: bool = QUICK):
             best = min(best, time.monotonic() - t0)
         return best, out
 
-    rows, js = [], {"wave": wave, "batch": B, "max_new_tokens": N,
-                    "prompt_len": P, "decode_chunk": chunk, "results": {}}
+    rows, path_rows = [], []
+    js = {"wave": wave, "batch": B, "max_new_tokens": N,
+          "prompt_len": P, "decode_chunk": chunk, "results": {}}
     for seed, dist in enumerate(("uniform", "bimodal", "long-tail")):
         lens = _lengths(dist, B, N, np.random.default_rng(100 + seed))
         useful = int(lens.sum())
@@ -117,6 +179,16 @@ def run(quick: bool = QUICK):
                          "occupancy": occ, "ideal_occupancy": ideal,
                          "decode_steps": steps,
                          "speedup": speedup if engine == "genserve" else 1.0})
+
+        step_s = _decode_path_axis(cfg, params, wave, P, N, lens,
+                                   quick=quick)
+        t_vm = step_s["vmapped-per-slot"]
+        for label, t in step_s.items():
+            path_rows.append({"dist": dist, "decode_path": label,
+                              "step_ms": t * 1e3,
+                              "wave_tok_s": wave / t,
+                              "speedup_vs_vmapped": t_vm / t})
+
         js["results"][dist] = {
             "useful_tokens": useful,
             "single_wave_s": t_single, "genserve_s": t_gs,
@@ -127,9 +199,13 @@ def run(quick: bool = QUICK):
             "genserve_decode_steps": stats["decode_steps"],
             "single_wave_decode_steps": int(np.ceil(B / wave) * N),
             "ideal_occupancy": ideal,
+            "decode_path_step_s": step_s,
+            "batched_vs_vmapped_speedup":
+                t_vm / step_s["batched-jnp"],
         }
 
     emit("genserve_throughput", rows)
+    emit("genserve_decode_path", path_rows)
     os.makedirs("results", exist_ok=True)
     path = os.path.join("results", "genserve_throughput.json")
     with open(path, "w") as f:

@@ -116,12 +116,17 @@ def pair_min_cost(topo: Topology, devs_a: Sequence[int],
 # Per-layer volumes and FLOPs
 # ---------------------------------------------------------------------------
 
+# attention-free recurrent state width per channel (matches the linear-
+# time state-update FLOP term below and the decode state read in c_hbm)
+_STATE_DIM = 64
+
+
 def flops_per_layer(task: Task, seq: int) -> float:
     """Per-sample per-layer forward FLOPs (Appendix B 'Computation')."""
     m = task.model
     if m.attention_free:
         proj = 2 * 5 * seq * m.h1 * m.h1          # r,k,v,g,o projections
-        attn = 2 * seq * m.h1 * 64                # linear-time state update
+        attn = 2 * seq * m.h1 * _STATE_DIM        # linear-time state update
         mlp = 2 * 2 * seq * m.h1 * m.h2 + 2 * seq * m.h1 * m.h1
         return proj + attn + mlp
     qkvo = 2 * 4 * seq * m.h1 * m.h1
@@ -253,24 +258,47 @@ class CostModel:
         return requests / max(waves, 1.0)
 
     def c_hbm(self, plan: Plan, t: int, i: int, j: int) -> float:
+        """Decode HBM roofline priced the way the wave actually executes
+        (flash-decode over a batched wave):
+
+          * weights stream once per *wave* step, amortized over the
+            ``dbs`` occupied slots — ``n / dbs`` waves of ``seq_out``
+            steps each;
+          * each occupied slot additionally reads its own KV cache every
+            step — KV bytes do NOT amortize across the wave (``n *
+            seq_out`` slot-steps at mean cache length ``seq_in +
+            seq_out / 2``); attention-free models read a fixed-size
+            recurrent state instead (O(1) in sequence length).
+        """
         task = self.wf.task(t)
         if task.kind != TaskKind.GEN:
             return 0.0
         m = task.model
-        if m.attention_free:
-            # recurrent decode is compute-, not KV-, bound; weights still
-            # stream from HBM once per decode step
-            pass
         dp, pp, tp = plan.parallel[t]
         nm, mbs = self._nm_mbs(plan, t, i)
         nl = plan.stage_layers(self.wf, t, j)
         dbs = self.gen_decode_wave(plan, t, i)  # bounded-wave batching
+        n = nm * mbs
+        if m.attention_free:
+            # recurrent state read+write per layer-step (matches the
+            # h1 x 64 state the flops model assumes), length-independent
+            kv_tok, kv_len = 2.0 * _STATE_DIM * m.h1 * BYTES_BF16, 1.0
+        else:
+            # k + v per layer-token: GQA stores n_kv_heads * head_dim
+            # channels (the flash-decode kernel reads KV heads only);
+            # h1 fallback when the spec has no head geometry
+            kv_dim = (m.n_kv_heads * m.head_dim
+                      if m.n_kv_heads and m.head_dim else m.h1)
+            kv_tok = 2.0 * kv_dim * BYTES_BF16
+            kv_len = self.wf.seq_in + self.wf.seq_out / 2.0
         worst = 0.0
         for k in range(tp):
             d = int(plan.assignment[t][i, j, k])
-            c = self.wf.seq_out * nm * mbs * BYTES_BF16 * nl \
+            weights = self.wf.seq_out * n * BYTES_BF16 * nl \
                 * m.layer_active_count / (dbs * self.topo.hbm(d) * tp)
-            worst = max(worst, c)
+            kv = self.wf.seq_out * n * nl * kv_tok * kv_len \
+                / (self.topo.hbm(d) * tp)
+            worst = max(worst, weights + kv)
         return worst
 
     def c_bubble(self, plan: Plan, t: int, i: int) -> float:

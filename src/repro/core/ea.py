@@ -59,6 +59,7 @@ class EvolutionarySearch:
         self._train_groups = {gi for gi, g in enumerate(grouping)
                               if any(wf.task(t).kind == TaskKind.TRAIN
                                      for t in g)}
+        self._ranked_cache: Dict[Tuple[int, int], List[Tuple[int, int, int]]] = {}
 
     # -- genome <-> plan -------------------------------------------------
     def _group_slices(self) -> List[slice]:
@@ -202,13 +203,26 @@ class EvolutionarySearch:
             a, b = self.rng.integers(self.topo.n, size=2)
             perm[a], perm[b] = perm[b], perm[a]
         elif op < 0.8:
-            # change a task's parallelization
+            # change a task's parallelization: half the moves walk the
+            # cost-model ranking of that task's candidates (geometric
+            # bias toward the top — directed search, cached per
+            # (task, group size)), half stay uniform for exploration
             t = int(self.rng.integers(self.wf.n_tasks))
             gi = next(i for i, g in enumerate(self.grouping) if t in g)
             n = self.sizes[gi]
-            feas = feasible_parallelizations(
-                n, self.wf.task(t).model.n_layers)
-            par[t] = feas[int(self.rng.integers(len(feas)))]
+            key = (t, n)
+            if key not in self._ranked_cache:
+                self._ranked_cache[key] = self._ranked_pars(
+                    t, n, self._seed_order()[:n])
+            ranked = self._ranked_cache[key]
+            if ranked and self.rng.random() < 0.5:
+                idx = min(int(self.rng.geometric(0.45)) - 1,
+                          len(ranked) - 1)
+                par[t] = ranked[idx]
+            else:
+                feas = feasible_parallelizations(
+                    n, self.wf.task(t).model.n_layers)
+                par[t] = feas[int(self.rng.integers(len(feas)))]
         else:
             # shuffle a task's tasklet order
             t = int(self.rng.integers(self.wf.n_tasks))

@@ -11,12 +11,12 @@ the same machine.
 
 Slot lifecycle::
 
-        queue (FIFO)                          wave of W slots
+        queue (FIFO | SJF)                    wave of W slots
      ┌──────────────┐   admit (prefill      ┌────┬────┬────┬────┐
      │ r7 r6 r5 r4  │ ─────────────────────▶│ r0 │ r1 │ r2 │ r3 │
      └──────────────┘   inject + scatter)   └─┬──┴─┬──┴─┬──┴─┬──┘
                                               │    │    │    │  decode step
-            ▲                                 ▼    ▼    ▼    ▼  (vmapped,
+            ▲                                 ▼    ▼    ▼    ▼  (batched,
             │                               tok  tok  EOS  tok   per-slot pos)
             │         retire (EOS or budget) ────── r2 ──────┐
             │                                                ▼
@@ -27,8 +27,10 @@ Slot lifecycle::
 Invariants:
   * shapes are static — membership is masks/scatters, never recompiles;
   * every slot carries its own cache position: recycled slots get exact
-    RoPE phases, ring-window validity and recurrent state (the per-slot
-    decode is a vmap of the B=1 ``transformer.decode_step``);
+    RoPE phases, ring-window validity and recurrent state (the wave is
+    one natively batched ``transformer.decode_step`` with per-slot
+    positions — the Sq == 1 flash-decode kernel path under the pallas
+    impl; a vmap of the B=1 decode remains as the parity reference);
   * admission replaces a slot's cache rows wholesale
     (``models.cache.scatter_slots``) — no stale state can leak;
   * EOS/validity semantics are shared with the single-wave reference

@@ -48,13 +48,17 @@ def generate(params, cfg: ModelConfig, prompts, rng,
              sampler: "rollout.SamplerConfig", *,
              wave: Optional[int] = None, decode_chunk: int = 1,
              gen_lens: Optional[Sequence[int]] = None,
-             fast_path: bool = True
+             fast_path: bool = True, decode_path: str = "batched",
+             admission: str = "fifo"
              ) -> Tuple[Dict[str, jnp.ndarray], Dict[str, object]]:
     """Continuous-batching generation with the rollout contract.
 
     `wave` defaults to ``core.plan.decode_wave(B)``; batches no larger
     than the wave take the single-wave reference path unless
     ``fast_path=False`` (tests) or per-request budgets force the engine.
+    ``decode_path`` / ``admission`` select the wave-decode execution path
+    (batched fast path vs the vmapped per-slot reference) and the queue
+    policy (FIFO vs shortest-job-first when budgets are known).
     """
     B = int(np.asarray(prompts).shape[0])
     W = int(wave) if wave else plan_mod.decode_wave(B)
@@ -65,5 +69,6 @@ def generate(params, cfg: ModelConfig, prompts, rng,
     gcfg = GenServeConfig(wave=min(W, B), max_new_tokens=sampler.max_new_tokens,
                           decode_chunk=decode_chunk,
                           temperature=sampler.temperature,
-                          eos_token=sampler.eos_token, greedy=sampler.greedy)
+                          eos_token=sampler.eos_token, greedy=sampler.greedy,
+                          decode_path=decode_path, admission=admission)
     return serve(params, cfg, prompts, rng, gcfg, gen_lens=gen_lens)

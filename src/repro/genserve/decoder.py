@@ -8,18 +8,22 @@ Device-side execution is two jitted, fixed-shape programs per
     the wave cache (``models.cache.scatter_slots`` — whole-row
     replacement, so recycled slots cannot see stale state);
   * ``chunk``  — ``decode_chunk`` wave decode steps under ``lax.scan``:
-    each step runs a vmapped *per-slot* single-token decode (every slot
-    carries its own cache position, so RoPE phases, ring-buffer windows
-    and recurrent states stay exactly right for recycled slots), samples
-    the next token for the whole wave, records it into the per-request
-    output buffers, and retires slots that emitted EOS or hit their
-    budget.
+    each step runs one *batched* single-token ``decode_step`` over the
+    whole wave with per-slot cache positions (every slot keeps its own
+    RoPE phase, ring-buffer window and recurrent state, so recycled
+    slots stay exact while sharing a single fused attention call —
+    the flash-decode Pallas kernel when the pallas impl is active),
+    samples the next token for the whole wave, records it into the
+    per-request output buffers, and retires slots that emitted EOS or
+    hit their budget.  ``decode_path="vmapped"`` selects the legacy
+    W-way vmap of a B=1 decode for parity testing.
 
 The host loop owns dynamic membership: it reads back the ``occupied``
 vector after every chunk, retires finished requests via the
-``scheduler.SlotTable``, and back-fills freed slots from the FIFO queue
-with another ``admit`` call.  All shapes stay static — membership changes
-are masks and scatters, never recompilation.
+``scheduler.SlotTable``, and back-fills freed slots from the admission
+queue (FIFO by default; ``admission="sjf"`` admits shortest known
+budgets first) with another ``admit`` call.  All shapes stay static —
+membership changes are masks and scatters, never recompilation.
 
 RNG schedule: the first ``max_new_tokens`` sampling events use
 ``jax.random.split(rng, max_new_tokens)`` — the exact schedule of
@@ -39,6 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.genserve.scheduler import Request, RequestQueue, SlotTable
+from repro.models import attention as attn_mod
 from repro.models import cache as cache_mod
 from repro.models import sampling
 from repro.models import transformer as T
@@ -55,22 +60,36 @@ class GenServeConfig:
     temperature: float = 1.0
     eos_token: Optional[int] = None
     greedy: bool = False
+    decode_path: str = "batched"     # "batched" | "vmapped" wave decode
+    admission: str = "fifo"          # "fifo" | "sjf" queue policy
 
     def validate(self) -> None:
         assert self.wave >= 1 and self.max_new_tokens >= 1
         assert self.decode_chunk >= 1
+        assert self.decode_path in ("batched", "vmapped")
+        assert self.admission in ("fifo", "sjf")
 
 
 # ---------------------------------------------------------------------------
-# Per-slot decode: vmap the single-sequence decode step over the wave.
-# Each slot is an independent B=1 decode with its own cache position —
-# this is what makes recycled slots (different positions in the same
-# wave) exact, including RoPE and ring-buffer slot validity.
+# Wave decode: one batched decode_step over all W slots.  The cache
+# leaves are already laid out [R, W, ...] — exactly decode_step's batch
+# layout — and per-slot cache positions ([W] `pos`) carry each recycled
+# slot's own RoPE phase and ring-window validity, so the whole wave
+# shares one fused attention call (the Sq == 1 flash-decode path when
+# `set_attention_impl("pallas")` is active).  The legacy W-way vmap of a
+# B=1 decode_step is kept as the "vmapped" parity path.
 # ---------------------------------------------------------------------------
 
-def _wave_decode(params, cfg: ModelConfig, tok, pos, blocks):
+def _wave_decode_batched(params, cfg: ModelConfig, tok, pos, blocks):
     """tok, pos: [W]; blocks: cache leaves [R, W, ...].
     Returns (logits [W, V], new blocks)."""
+    logits, new = T.decode_step(params, cfg, tok[:, None],
+                                {"blocks": blocks, "pos": pos})
+    return logits, new["blocks"]
+
+
+def _wave_decode_vmapped(params, cfg: ModelConfig, tok, pos, blocks):
+    """Per-slot reference: vmap of the B=1 decode_step over the wave."""
 
     def one_slot(tok_w, pos_w, slot_blocks):
         cache = {"blocks": jax.tree_util.tree_map(lambda l: l[:, None],
@@ -90,7 +109,11 @@ def _wave_decode(params, cfg: ModelConfig, tok, pos, blocks):
 
 @functools.lru_cache(maxsize=64)
 def _build_fns(cfg: ModelConfig, gcfg: GenServeConfig, prompt_len: int,
-               n_reqs: int):
+               n_reqs: int, impl: str = "jnp"):
+    # `impl` (the active models.attention implementation) is part of the
+    # cache key only: tracing reads the global impl at first call, so a
+    # cached jitted fn built under "jnp" must not be reused under
+    # "pallas" (or vice versa).
     N = gcfg.max_new_tokens
     eos = gcfg.eos_token
     dummy_row = n_reqs               # output buffers carry a scratch row
@@ -130,12 +153,15 @@ def _build_fns(cfg: ModelConfig, gcfg: GenServeConfig, prompt_len: int,
                                    state["occupied"])
         return st
 
+    wave_decode = (_wave_decode_batched if gcfg.decode_path == "batched"
+                   else _wave_decode_vmapped)
+
     def chunk(params, state, keys):
         """`decode_chunk` wave steps; returns per-step active counts."""
 
         def step(st, key):
-            logits, new_blocks = _wave_decode(params, cfg, st["tok"],
-                                              st["pos"], st["cache"])
+            logits, new_blocks = wave_decode(params, cfg, st["tok"],
+                                             st["pos"], st["cache"])
             nxt = sample(key, logits)
             lp = sampling.token_logprobs(logits, nxt)
             emit = st["occupied"]
@@ -201,9 +227,11 @@ def serve(params, cfg: ModelConfig, prompts, rng, gcfg: GenServeConfig,
 
     limits = np.full((B,), N, np.int64) if gen_lens is None \
         else np.clip(np.asarray(gen_lens, np.int64), 1, N)
-    queue = RequestQueue([Request(i, int(limits[i])) for i in range(B)])
+    queue = RequestQueue([Request(i, int(limits[i])) for i in range(B)],
+                         policy=gcfg.admission)
     table = SlotTable(W)
-    admit_fn, chunk_fn = _build_fns(cfg, gcfg, P, B)
+    admit_fn, chunk_fn = _build_fns(cfg, gcfg, P, B,
+                                    attn_mod.get_attention_impl())
     state = _init_state(cfg, gcfg, P, B)
 
     # rngs[t] drives the t-th sampling event, mirroring rollout.generate:

@@ -7,6 +7,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.backend import resolve_interpret
 from repro.kernels.decode_attention.kernel import decode_attention_kernel
 
 NEG_INF = -1e30
@@ -21,11 +22,21 @@ def _pad_axis(x, axis, mult, value=0.0):
     return jnp.pad(x, widths, constant_values=value)
 
 
+def decode_attention(q, k, v, bias, *, cap: Optional[float] = None,
+                     bk: int = 512, interpret: Optional[bool] = None):
+    """q: [B,H,hd]; k/v: [B,L,KV,hd]; bias: [B,L] additive mask.
+
+    ``interpret=None`` resolves backend-aware outside the jit boundary
+    (compiled on TPU, interpreter elsewhere; REPRO_PALLAS_INTERPRET
+    overrides per call)."""
+    return _decode_attention(q, k, v, bias, cap=cap, bk=bk,
+                             interpret=resolve_interpret(interpret))
+
+
 @functools.partial(jax.jit,
                    static_argnames=("cap", "bk", "interpret"))
-def decode_attention(q, k, v, bias, *, cap: Optional[float] = None,
-                     bk: int = 512, interpret: bool = True):
-    """q: [B,H,hd]; k/v: [B,L,KV,hd]; bias: [B,L] additive mask."""
+def _decode_attention(q, k, v, bias, *, cap: Optional[float],
+                      bk: int, interpret: bool):
     B, H, hd = q.shape
     L = k.shape[1]
     hd_pad = max(hd + (-hd % 128), 128)

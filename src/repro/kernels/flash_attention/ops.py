@@ -8,6 +8,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.backend import resolve_interpret
 from repro.kernels.flash_attention.kernel import flash_attention_kernel
 
 
@@ -20,13 +21,23 @@ def _pad_axis(x, axis, mult):
     return jnp.pad(x, widths)
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "causal", "window", "cap", "bq", "bk", "interpret"))
 def flash_attention(q, k, v, *, causal: bool = True,
                     window: Optional[int] = None,
                     cap: Optional[float] = None,
                     bq: int = 128, bk: int = 512,
-                    interpret: bool = True):
+                    interpret: Optional[bool] = None):
+    """``interpret=None`` resolves backend-aware outside the jit
+    boundary (repro.kernels.backend)."""
+    return _flash_attention(q, k, v, causal=causal, window=window,
+                            cap=cap, bq=bq, bk=bk,
+                            interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "cap", "bq", "bk", "interpret"))
+def _flash_attention(q, k, v, *, causal: bool, window: Optional[int],
+                     cap: Optional[float], bq: int, bk: int,
+                     interpret: bool):
     B, S, H, hd = q.shape
     Sk = k.shape[1]
     scale_fix = 1.0

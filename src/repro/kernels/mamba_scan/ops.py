@@ -3,16 +3,26 @@ exp(0*A)=1 and contribution dt*x=0) and di to the block multiple."""
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.backend import resolve_interpret
 from repro.kernels.mamba_scan.kernel import mamba_scan_kernel
 
 
-@functools.partial(jax.jit, static_argnames=("chunk", "bd", "interpret"))
 def mamba_scan(dt, x, Bm, Cm, A, *, chunk: int = 64, bd: int = 256,
-               interpret: bool = True):
+               interpret: Optional[bool] = None):
+    """``interpret=None`` resolves backend-aware outside the jit
+    boundary (repro.kernels.backend)."""
+    return _mamba_scan(dt, x, Bm, Cm, A, chunk=chunk, bd=bd,
+                       interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "bd", "interpret"))
+def _mamba_scan(dt, x, Bm, Cm, A, *, chunk: int, bd: int,
+                interpret: bool):
     B, S, di = x.shape
     c = min(chunk, S)
     pad_s = (-S) % c

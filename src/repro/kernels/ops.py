@@ -1,6 +1,7 @@
 """Top-level kernel dispatch used by the model layer when
-`set_attention_impl("pallas")` is active.  On CPU all kernels execute in
-interpret mode; on TPU set interpret=False (the TARGET configuration)."""
+`set_attention_impl("pallas")` is active.  Execution mode is
+backend-aware (``repro.kernels.backend``): compiled Pallas on TPU,
+interpret mode elsewhere, overridable via REPRO_PALLAS_INTERPRET."""
 from __future__ import annotations
 
 from typing import Optional
@@ -8,12 +9,11 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.backend import default_interpret, resolve_interpret
 from repro.kernels.decode_attention.ops import decode_attention
 from repro.kernels.flash_attention.ops import flash_attention as _flash
 from repro.kernels.mamba_scan.ops import mamba_scan
 from repro.kernels.rwkv6_scan.ops import rwkv6_scan
-
-INTERPRET = True  # flipped to False on real TPU deployments
 
 
 def flash_attention(q, k, v, q_pos, k_pos, *, causal=True, window=None,
@@ -29,5 +29,12 @@ def flash_attention(q, k, v, q_pos, k_pos, *, causal=True, window=None,
         return attn.chunked_attention(q, k, v, q_pos, k_pos, causal=causal,
                                       window=window, cap=cap,
                                       k_valid=k_valid)
-    return _flash(q, k, v, causal=causal, window=window, cap=cap,
-                  interpret=INTERPRET)
+    return _flash(q, k, v, causal=causal, window=window, cap=cap)
+
+
+def flash_decode_attention(q, k, v, bias, *, cap=None):
+    """Single-token (Sq == 1) decode attention over a slot-validity bias.
+
+    q: [B, H, hd]; k/v: [B, L, KV, hd] (GQA via H // KV); bias: [B, L]
+    additive (0 = attend, -inf = masked).  Returns [B, H, hd]."""
+    return decode_attention(q, k, v, bias, cap=cap)

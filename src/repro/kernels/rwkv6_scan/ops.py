@@ -3,16 +3,25 @@ padding does not disturb y for real positions since they precede the pad)."""
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.backend import resolve_interpret
 from repro.kernels.rwkv6_scan.kernel import rwkv6_scan_kernel
 
 
-@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def rwkv6_scan(r, k, v, logw, u, *, chunk: int = 64,
-               interpret: bool = True):
+               interpret: Optional[bool] = None):
+    """``interpret=None`` resolves backend-aware outside the jit
+    boundary (repro.kernels.backend)."""
+    return _rwkv6_scan(r, k, v, logw, u, chunk=chunk,
+                       interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def _rwkv6_scan(r, k, v, logw, u, *, chunk: int, interpret: bool):
     B, S, H, N = r.shape
     c = min(chunk, S)
     pad = (-S) % c

@@ -1,13 +1,28 @@
 """Attention: GQA, RoPE, sliding windows, logit softcap, qk-norm.
 
-Two jnp execution paths:
-  * ``plain``   — materializes the full score matrix (small sequences).
-  * ``chunked`` — flash-style blockwise online softmax (lax.scan over KV
-    blocks nested in a scan over Q blocks). Never materializes more than
-    [B, H, q_chunk, k_chunk] scores; required for 32k+ prefill.
+``multihead_attention`` dispatch table:
 
-The Pallas TPU kernel (repro.kernels.flash_attention) implements the same
-contract; `set_attention_impl("pallas")` switches the model over to it.
+  impl     shape       path
+  ------   ---------   -----------------------------------------------
+  jnp      small       ``plain_attention`` — materializes the full
+                       score matrix (Sq * Sk <= _CHUNK_THRESHOLD**2).
+  jnp      large       ``chunked_attention`` — flash-style blockwise
+                       online softmax (lax.scan over KV blocks nested in
+                       a scan over Q blocks).  Never materializes more
+                       than [B, H, q_chunk, k_chunk] scores; required
+                       for 32k+ prefill.
+  pallas   Sq > 1      ``kernels.flash_attention`` — fused TPU kernel
+                       for training / prefill self-attention
+                       (contiguous arange positions).
+  pallas   Sq == 1     ``kernels.decode_attention`` — flash-decode: one
+                       query token per slot against a (possibly ring)
+                       KV cache, ragged lengths and window validity
+                       folded into a per-slot additive [B, L] bias.
+
+Positions may be shared 1-D arrays ([Sq] / [Sk]) or per-row 2-D arrays
+([B, Sq] / [B, Sk]) — the latter is what the batched wave decode uses so
+recycled slots at distinct cache positions share one kernel launch.  The
+jnp paths are the parity oracles for both Pallas kernels.
 """
 from __future__ import annotations
 
@@ -129,7 +144,11 @@ def plain_attention(q, k, v, q_pos, k_pos, *, causal, window,
     scores = softcap(scores, cap)
     bias = _mask_bias(q_pos, k_pos, causal=causal, window=window,
                       k_valid=k_valid)
-    scores = scores + (bias if bias.ndim == scores.ndim else bias[None, None])
+    if bias.ndim == 2:          # shared positions: [Sq, Sk]
+        bias = bias[None, None]
+    elif bias.ndim == 3:        # per-row positions: [B, Sq, Sk]
+        bias = bias[:, None]
+    scores = scores + bias
     probs = jax.nn.softmax(scores, axis=-1)
     return _gqa_values(probs, v).astype(q.dtype)
 
@@ -219,10 +238,31 @@ def chunked_attention(q, k, v, q_pos, k_pos, *, causal, window,
 # Top-level dispatch
 # ---------------------------------------------------------------------------
 
+def decode_bias(q_pos, k_pos, *, causal=True, window=None, k_valid=None,
+                batch=None):
+    """Per-slot additive [B, Sk] bias for single-token (Sq == 1) decode.
+
+    Collapses causal / window / slot-validity masking against the cache
+    positions into the flash-decode kernel's bias operand."""
+    bias = _mask_bias(q_pos, k_pos, causal=causal, window=window,
+                      k_valid=k_valid)                 # [..., 1, Sk]
+    bias = bias[..., 0, :]
+    if batch is not None:
+        bias = jnp.broadcast_to(bias, (batch, bias.shape[-1]))
+    return bias
+
+
 def multihead_attention(q, k, v, q_pos, k_pos, *, causal=True, window=None,
                         cap=None, k_valid=None, force_impl=None):
     impl = force_impl or _IMPL
     Sq, Sk = q.shape[1], k.shape[1]
+    if impl == "pallas" and Sq == 1:
+        from repro.kernels import ops as kernel_ops
+        bias = decode_bias(q_pos, k_pos, causal=causal, window=window,
+                           k_valid=k_valid, batch=q.shape[0])
+        out = kernel_ops.flash_decode_attention(q[:, 0], k, v, bias,
+                                                cap=cap)
+        return out[:, None]
     if impl == "pallas" and Sq > 1:
         from repro.kernels import ops as kernel_ops
         return kernel_ops.flash_attention(

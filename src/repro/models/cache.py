@@ -93,14 +93,18 @@ def ring_slot_positions(cache_len: int, window: Optional[int], pos):
     """Absolute position stored in each cache slot at decode step `pos`.
 
     Full cache (window None): slot i holds position i (valid if i <= pos).
-    Ring cache: slot i holds the largest p' <= pos with p' % W == i."""
+    Ring cache: slot i holds the largest p' <= pos with p' % W == i.
+
+    `pos` may be a scalar (shared position, returns [L]) or a [B] vector
+    of per-slot positions (batched decode, returns [B, L])."""
     idx = jnp.arange(cache_len)
+    p = jnp.asarray(pos, jnp.int32)[..., None]      # [1] or [B, 1]
     if window is None:
-        k_pos = idx
-        valid = idx <= pos
+        valid = idx <= p
+        k_pos = jnp.broadcast_to(idx, valid.shape)
     else:
         W = cache_len
-        k_pos = pos - ((pos - idx) % W)
+        k_pos = p - ((p - idx) % W)
         valid = k_pos >= 0
     return k_pos, valid
 
@@ -108,13 +112,22 @@ def ring_slot_positions(cache_len: int, window: Optional[int], pos):
 def write_kv(cache_k, cache_v, k_new, v_new, pos, window: Optional[int]):
     """Write one token's k/v at decode position `pos`.
 
-    cache_k: [B, L, KV, hd]; k_new: [B, 1, KV, hd]."""
+    cache_k: [B, L, KV, hd]; k_new: [B, 1, KV, hd].  `pos` is a scalar
+    (all rows write the same slot) or a [B] vector of per-row positions
+    (batched wave decode: each slot writes at its own ring offset)."""
     L = cache_k.shape[1]
-    slot = pos % L if window is not None else jnp.minimum(pos, L - 1)
-    cache_k = jax.lax.dynamic_update_slice(
-        cache_k, k_new.astype(cache_k.dtype), (0, slot, 0, 0))
-    cache_v = jax.lax.dynamic_update_slice(
-        cache_v, v_new.astype(cache_v.dtype), (0, slot, 0, 0))
+    p = jnp.asarray(pos)
+    if p.ndim == 0:
+        slot = p % L if window is not None else jnp.minimum(p, L - 1)
+        cache_k = jax.lax.dynamic_update_slice(
+            cache_k, k_new.astype(cache_k.dtype), (0, slot, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(
+            cache_v, v_new.astype(cache_v.dtype), (0, slot, 0, 0))
+        return cache_k, cache_v
+    slot = p % L if window is not None else jnp.minimum(p, L - 1)
+    rows = jnp.arange(cache_k.shape[0])
+    cache_k = cache_k.at[rows, slot].set(k_new[:, 0].astype(cache_k.dtype))
+    cache_v = cache_v.at[rows, slot].set(v_new[:, 0].astype(cache_v.dtype))
     return cache_k, cache_v
 
 

@@ -210,20 +210,27 @@ def forward(params, cfg: ModelConfig, inputs: Dict[str, Any], *,
 
 def _layer_decode(p, cfg: ModelConfig, spec, x, cache_entry, pos, *,
                   long_mode):
-    """x: [B,1,d]. Returns (x, new_cache_entry)."""
+    """x: [B,1,d]. Returns (x, new_cache_entry).
+
+    `pos` is a scalar (all rows decode the same position — the
+    single-sequence / full-batch rollout path) or a [B] vector of
+    per-row cache positions (batched wave decode: every slot keeps its
+    own RoPE phase, ring offset and validity mask)."""
     new_entry = {}
+    per_slot = jnp.ndim(pos) > 0
+    q_pos = (jnp.asarray(pos, jnp.int32)[:, None] if per_slot
+             else jnp.full((1,), pos, jnp.int32))      # [B,1] or [1]
     h = rmsnorm(p["norm1"], x, cfg.norm_eps)
     if spec.mixer == Mixer.ATTENTION:
         window = cache_mod.effective_window(cfg, spec, long_mode)
-        q, k, v = attn_mod.qkv_project(p["attn"], cfg, h,
-                                       jnp.full((1,), pos, jnp.int32))
+        q, k, v = attn_mod.qkv_project(p["attn"], cfg, h, q_pos)
         ck, cv = cache_mod.write_kv(cache_entry["k"], cache_entry["v"],
                                     k, v, pos, window)
         new_entry.update(k=ck, v=cv)
         L = ck.shape[1]
         k_pos, valid = cache_mod.ring_slot_positions(L, window, pos)
         y = attn_mod.multihead_attention(
-            q, ck, cv, jnp.full((1,), pos, jnp.int32), k_pos,
+            q, ck, cv, q_pos, k_pos,
             causal=True, window=window, cap=cfg.attn_softcap, k_valid=valid)
         y = y.reshape(x.shape[0], 1, -1) @ p["attn"]["wo"]
     elif spec.mixer == Mixer.MAMBA:
@@ -253,7 +260,13 @@ def _layer_decode(p, cfg: ModelConfig, spec, x, cache_entry, pos, *,
 
 def decode_step(params, cfg: ModelConfig, tokens, cache, *,
                 long_mode: bool = False):
-    """tokens: [B, 1] int32. Returns (logits [B, V], new_cache)."""
+    """tokens: [B, 1] int32. Returns (logits [B, V], new_cache).
+
+    ``cache["pos"]`` is a scalar (every row at the same position) or a
+    [B] vector of per-row positions — the natively batched fast path the
+    genserve wave decode uses: ragged KV lengths, RoPE phases and
+    ring-window validity are expressed per-row, so one fused attention
+    call covers a whole wave of recycled slots."""
     assert not cfg.is_encoder_only, "encoder-only models have no decode step"
     pos = cache["pos"]
     x = embed_tokens(params["embed"], cfg, tokens)

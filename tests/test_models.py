@@ -167,6 +167,91 @@ def test_ring_buffer_positions():
     assert bool(valid.all())
 
 
+def test_ring_buffer_positions_per_slot():
+    """Vector pos -> per-row [B, L] positions/validity, row i equal to
+    the scalar call at pos[i] (the batched wave-decode contract)."""
+    pos = jnp.asarray([2, 6, 0])
+    for window, L in ((None, 8), (4, 4)):
+        k_pos, valid = cache_mod.ring_slot_positions(L, window, pos)
+        assert k_pos.shape == valid.shape == (3, L)
+        for i, p in enumerate([2, 6, 0]):
+            kp_i, v_i = cache_mod.ring_slot_positions(L, window,
+                                                      jnp.asarray(p))
+            np.testing.assert_array_equal(np.asarray(k_pos[i]),
+                                          np.asarray(kp_i))
+            np.testing.assert_array_equal(np.asarray(valid[i]),
+                                          np.asarray(v_i))
+
+
+def test_write_kv_per_row_positions():
+    """Batched write_kv: row i writes at its own slot (ring and full)."""
+    B, L, KV, hd = 3, 4, 1, 2
+    ks = jax.random.split(KEY, 2)
+    k_new = jax.random.normal(ks[0], (B, 1, KV, hd))
+    v_new = jax.random.normal(ks[1], (B, 1, KV, hd))
+    pos = jnp.asarray([1, 6, 3])
+    for window in (4, None):
+        ck = jnp.zeros((B, L, KV, hd))
+        cv = jnp.zeros((B, L, KV, hd))
+        ck, cv = cache_mod.write_kv(ck, cv, k_new, v_new, pos, window)
+        for i, p in enumerate([1, 6, 3]):
+            ck_i, cv_i = cache_mod.write_kv(
+                jnp.zeros((1, L, KV, hd)), jnp.zeros((1, L, KV, hd)),
+                k_new[i:i + 1], v_new[i:i + 1], jnp.asarray(p), window)
+            np.testing.assert_array_equal(np.asarray(ck[i]),
+                                          np.asarray(ck_i[0]))
+            np.testing.assert_array_equal(np.asarray(cv[i]),
+                                          np.asarray(cv_i[0]))
+
+
+@pytest.mark.parametrize("window,cap,KV", [
+    (None, None, 2), (4, None, 2), (None, 30.0, 1), (6, 20.0, 4),
+])
+def test_sq1_flash_decode_dispatch_matches_jnp(window, cap, KV):
+    """Sq == 1 under the pallas impl routes to the flash-decode kernel
+    and agrees with the jnp reference path — including per-slot ragged
+    positions, ring-window validity, GQA and softcap."""
+    B, L, H, hd = 3, 8, 4, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, 1, H, hd))
+    k = jax.random.normal(ks[1], (B, L, KV, hd))
+    v = jax.random.normal(ks[2], (B, L, KV, hd))
+    pos = jnp.asarray([2, 7, 5])
+    q_pos = pos[:, None]
+    k_pos, valid = cache_mod.ring_slot_positions(L, window, pos)
+    kwargs = dict(causal=True, window=window, cap=cap, k_valid=valid)
+    ref = attn.multihead_attention(q, k, v, q_pos, k_pos,
+                                   force_impl="jnp", **kwargs)
+    out = attn.multihead_attention(q, k, v, q_pos, k_pos,
+                                   force_impl="pallas", **kwargs)
+    assert out.shape == (B, 1, H, hd)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_sq1_dispatch_invokes_decode_kernel(monkeypatch):
+    """The Sq == 1 pallas dispatch must hit kernels.decode_attention,
+    not the flash (prefill) kernel."""
+    from repro.kernels import ops as kernel_ops
+    calls = []
+    real = kernel_ops.flash_decode_attention
+    monkeypatch.setattr(
+        kernel_ops, "flash_decode_attention",
+        lambda *a, **kw: calls.append("decode") or real(*a, **kw))
+    monkeypatch.setattr(
+        kernel_ops, "flash_attention",
+        lambda *a, **kw: calls.append("flash"))
+    B, L, H, hd = 2, 4, 2, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, 1, H, hd))
+    k = jax.random.normal(ks[1], (B, L, 2, hd))
+    v = jax.random.normal(ks[2], (B, L, 2, hd))
+    k_pos, valid = cache_mod.ring_slot_positions(L, None, jnp.asarray(3))
+    out = attn.multihead_attention(q, k, v, jnp.full((1,), 3), k_pos,
+                                   force_impl="pallas", k_valid=valid)
+    assert calls == ["decode"] and out.shape == (B, 1, H, hd)
+
+
 def test_effective_window_long_mode():
     cfg = ModelConfig(name="g", n_layers=2, d_model=64, n_heads=2,
                       n_kv_heads=2, d_ff=128, vocab_size=64,
