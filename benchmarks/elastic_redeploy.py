@@ -1,0 +1,176 @@
+"""Elastic redeployment benchmark (§6): throughput recovery from topology
+drift vs staying on the degraded incumbent.
+
+Two axes:
+
+* **recovery** (paper-scale, simulated): search an incumbent plan for a
+  GRPO workflow on the healthy multi-machine testbed, inject each named
+  drift scenario, run the warm-started ``reschedule``, and compare
+  steady-state simulated throughput of (a) the incumbent on the degraded
+  topology vs (b) the rescheduled plan — plus the one-off transition cost
+  and its break-even horizon.  A dropped-device drift leaves the
+  incumbent infeasible (throughput 0), which is exactly the case online
+  redeployment exists for.
+
+* **engine smoke** (tiny, real execution): a live trainer crosses a
+  forced ``drop_tail`` swap through the elastic controller; reports the
+  reschedule wall time, checkpoint size, and per-epoch measured iteration
+  times, verifying training state survives (monotone weight version).
+
+Writes the benchmark CSV and a committed ``results/elastic_redeploy.json``.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.core import redeploy, simulator, topology, workflow
+from repro.core.plan import check_constraints
+from repro.core.sha import HybridScheduler
+from repro.data.synthetic import AdditionTask, PromptDataset, VOCAB_SIZE
+from repro.engine.elastic import ElasticConfig, ElasticController
+from repro.models.config import ModelConfig
+from repro.rl.trainer import RLConfig, RLTrainer
+
+from benchmarks.common import QUICK, emit
+
+
+def _throughput(topo, wf, plan) -> float:
+    return simulator.simulate(topo, wf, plan, n_iterations=4).throughput
+
+
+def recovery_rows(quick: bool):
+    """Paper-scale simulated recovery per drift scenario."""
+    budget = 150 if quick else 400
+    counts = {"A100": 8, "L40S": 8} if quick else None   # None = 64 GPUs
+    topo = topology.build_testbed("single_region", counts=counts)
+    wf = workflow.make_grpo(workflow.QWEN_1_7B, global_batch=64)
+    sched = HybridScheduler(topo, wf, max_groupings=8,
+                            max_sizes_per_grouping=4)
+    r = sched.search(budget=budget)
+    ok, msg = check_constraints(topo, wf, r.plan)
+    assert ok, msg
+    healthy = _throughput(topo, wf, r.plan)
+
+    rows = []
+    for scenario in topology.DRIFT_SCENARIOS:
+        drift = topology.drift_scenario(scenario, topo, at=0)
+        topo_d = drift.topo_at(0)
+        t0 = time.monotonic()
+        d = redeploy.reschedule(topo_d, wf, r.plan, budget=budget,
+                                topo_old=topo)
+        resched_s = time.monotonic() - t0
+        incumbent_ok = math.isfinite(d.old_cost)
+        thr_old = _throughput(topo_d, wf, r.plan) if incumbent_ok else 0.0
+        thr_new = _throughput(topo_d, wf, d.plan) \
+            if d.plan is not None else 0.0
+        gain = d.old_cost - d.new_cost
+        breakeven = d.transition_cost_s / gain \
+            if math.isfinite(gain) and gain > 0 else 0.0
+        rows.append({
+            "scenario": scenario,
+            "switch": d.switch,
+            "incumbent_feasible": incumbent_ok,
+            "healthy_thr": healthy,
+            "degraded_incumbent_thr": thr_old,
+            "post_swap_thr": thr_new,
+            # None when the incumbent is infeasible (recovery from zero)
+            "recovery_x": thr_new / thr_old if thr_old > 0 else None,
+            "transition_s": d.transition_cost_s,
+            "breakeven_iters": breakeven,
+            "reschedule_wall_s": resched_s,
+        })
+    return rows
+
+
+def engine_smoke(quick: bool):
+    """Tiny real run across a forced drop_tail swap."""
+    iters = 8 if quick else 16
+    drift_at = max(iters // 3, 1)
+    cfg = ModelConfig(name="elastic-bench", n_layers=2, d_model=64,
+                      n_heads=2, n_kv_heads=2, head_dim=32, d_ff=128,
+                      vocab_size=VOCAB_SIZE, dtype="float32")
+    task = AdditionTask(max_operand=9)
+    topo = topology.build_testbed("single_region",
+                                  counts={"A100": 4, "L4": 4})
+    spec = workflow.LLMSpec.from_model_config(cfg)
+    wf = workflow.make_grpo(spec, global_batch=8, n_rollouts=4,
+                            seq_in=task.prompt_len,
+                            seq_out=task.max_answer_len)
+    sched = HybridScheduler(topo, wf, max_groupings=8,
+                            max_sizes_per_grouping=4)
+    r = sched.search(budget=120)
+    rl = RLConfig(algorithm="grpo", n_rollouts=4,
+                  max_new_tokens=task.max_answer_len)
+    trainer = RLTrainer(cfg, rl, task, jax.random.PRNGKey(0), plan=r.plan,
+                        topo=topo, wf=wf)
+    controller = ElasticController(
+        trainer, topology.drift_scenario("drop_tail", topo, at=drift_at),
+        ElasticConfig(budget=150, ckpt_dir="results/elastic_ckpt"))
+
+    ds = iter(PromptDataset(task, batch=8, seed=1))
+    key = jax.random.PRNGKey(7)
+    wv = []
+    for it in range(iters):
+        prompts, answers = next(ds)
+        key, k = jax.random.split(key)
+        trainer.iteration(prompts, answers, k)
+        wv.append(trainer.weight_version)
+        controller.poll(it)
+    swaps = controller.swaps
+    assert swaps, "drop_tail drift must force an applied swap"
+    assert all(b >= a for a, b in zip(wv, wv[1:])), \
+        "weight_version must stay monotone across the swap"
+    rec = swaps[0]
+    return {
+        "iters": iters,
+        "swap_iteration": rec.iteration,
+        "switch": rec.decision.switch,
+        "reschedule_wall_s": rec.reschedule_s,
+        "ckpt_bytes": rec.ckpt_bytes,
+        "transition_cost_s": rec.decision.transition_cost_s,
+        "final_epoch": trainer.engine.epoch,
+        "final_weight_version": trainer.weight_version,
+        "epochs": trainer.engine.epoch_report(),
+    }
+
+
+def run(quick: bool = QUICK):
+    rows = recovery_rows(quick)
+    smoke = engine_smoke(quick)
+    emit("elastic_redeploy", rows)
+    print(f"[elastic_redeploy] engine smoke: swap at iter "
+          f"{smoke['swap_iteration']}, reschedule "
+          f"{smoke['reschedule_wall_s']:.1f}s wall, epoch "
+          f"{smoke['final_epoch']}, wv {smoke['final_weight_version']}")
+
+    path = os.path.join("results", "elastic_redeploy.json")
+    os.makedirs("results", exist_ok=True)
+    js = _finite({"quick": quick, "recovery": rows, "engine_smoke": smoke})
+    with open(path, "w") as f:
+        json.dump(js, f, indent=2, allow_nan=False)
+    print(f"[elastic_redeploy] wrote {path}")
+
+
+def _finite(x):
+    """Strict-JSON sanitizer: non-finite floats become null."""
+    if isinstance(x, dict):
+        return {k: _finite(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_finite(v) for v in x]
+    if isinstance(x, (float, np.floating)):
+        return float(x) if math.isfinite(x) else None
+    if isinstance(x, (int, np.integer)):
+        return int(x)
+    return x
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, "src")
+    run()

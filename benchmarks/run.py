@@ -13,14 +13,16 @@ import traceback
 
 def main() -> None:
     sys.path.insert(0, "src")
-    from benchmarks import (engine_throughput, fig3_e2e, fig4_loadbalance,
-                            fig5_search_efficiency, fig6_small_scale_ilp,
-                            fig7_costmodel_validation,
+    from benchmarks import (elastic_redeploy, engine_throughput, fig3_e2e,
+                            fig4_loadbalance, fig5_search_efficiency,
+                            fig6_small_scale_ilp, fig7_costmodel_validation,
                             fig8_training_quality, fig10_heterogeneity,
                             genserve_throughput)
     benches = [
         ("engine_throughput (plan-driven engine, measured vs predicted)",
          engine_throughput.run),
+        ("elastic_redeploy (§6 throughput recovery vs degraded incumbent)",
+         elastic_redeploy.run),
         ("genserve_throughput (continuous batching vs single-wave decode)",
          genserve_throughput.run),
         ("fig3_e2e (Figure 3: end-to-end throughput)", fig3_e2e.run),

@@ -239,6 +239,39 @@ class EvolutionarySearch:
                     order[t] = devs.copy()
         return Individual(perm, par, order)
 
+    # -- incumbent injection (§6 reschedule warm start) ---------------------
+    def inject_plan(self, plan: Plan) -> bool:
+        """Seed the search with a known-good plan: score the plan itself
+        (one evaluation, straight into best) and add its genome — device
+        order, parallelizations, tasklet mapping — to the population so
+        mutation explores around it.  Returns False when the plan's
+        groups don't match this searcher's (grouping, sizes) arm."""
+        devs_of = {tuple(sorted(g.tasks)): [int(d) for d in g.devices]
+                   for g in plan.groups}
+        perm: List[int] = []
+        par: Dict[int, Tuple[int, int, int]] = {}
+        order: Dict[int, np.ndarray] = {}
+        for gi, g in enumerate(self.grouping):
+            devs = devs_of.get(tuple(sorted(g)))
+            if devs is None or len(devs) != self.sizes[gi]:
+                return False
+            perm.extend(devs)
+            for t in g:
+                par[t] = tuple(plan.parallel[t])
+                flat = [int(d) for d in plan.assignment[t].reshape(-1)]
+                rest = [d for d in devs if d not in set(flat)]
+                order[t] = np.array(flat + rest, dtype=int)
+        if sorted(perm) != list(range(self.topo.n)):
+            return False
+        ok, _ = check_constraints(self.topo, self.wf, plan)
+        self.evals += 1
+        cost = self.cm.cost(plan) if ok else math.inf
+        if ok and cost < self.best_cost:
+            self.best_cost, self.best_plan = cost, plan
+        self.population.append(
+            Individual(np.array(perm, dtype=int), par, order, cost))
+        return True
+
     # -- Baldwinian local search (locality) ---------------------------------
     def local_search(self, ind: Individual, max_steps: int = 20) -> Individual:
         """Greedy cross-group swaps maximizing locality gain, vectorized:

@@ -114,6 +114,10 @@ def candidate_group_sizes(wf: RLWorkflow, grouping, n_devices: int,
                           seed: int = 0) -> List[Tuple[int, ...]]:
     """Level-2 candidates: proportional + perturbations + random."""
     G = len(grouping)
+    if G > n_devices:
+        # more groups than devices: no composition of n_devices into G
+        # positive parts exists (small pools after a fleet shrink)
+        return []
     rng = np.random.default_rng(seed)
     base = proportional_sizes(wf, grouping, n_devices)
     cands = {tuple(base)}

@@ -58,10 +58,38 @@ class HybridScheduler:
         self.groupings = groupings
         self.max_sizes = max_sizes_per_grouping
         self._searchers: Dict[tuple, EvolutionarySearch] = {}
+        self._seeded_sizes: Dict[tuple, tuple] = {}
 
     def _sizes_for(self, tg) -> List[tuple]:
-        return [tuple(s) for s in enum_mod.candidate_group_sizes(
+        sizes = [tuple(s) for s in enum_mod.candidate_group_sizes(
             self.wf, tg, self.topo.n, self.max_sizes, seed=self.seed)]
+        seeded = self._seeded_sizes.get(tg)
+        if seeded is not None:
+            sizes = [seeded] + [s for s in sizes if s != seeded]
+        return sizes
+
+    def seed_incumbent(self, plan: Plan) -> None:
+        """Warm-start the search from an incumbent plan (§6 reschedule):
+        its task grouping becomes the first Level-1 arm, its exact group
+        sizes the first Level-2 arm of that grouping, and its device
+        order / parallelizations / tasklet mapping are injected into the
+        corresponding EA population — so a short budget re-evaluates the
+        incumbent itself before exploring, and an unchanged topology
+        reliably rediscovers it.  Incumbents that no longer fit the
+        topology (dropped devices, size mismatch) seed only what still
+        applies."""
+        grouping = tuple(sorted(tuple(sorted(g.tasks)) for g in plan.groups))
+        self.groupings = [grouping] + [g for g in self.groupings
+                                       if g != grouping]
+        size_of = {tuple(sorted(g.tasks)): len(g.devices)
+                   for g in plan.groups}
+        sizes = tuple(size_of[b] for b in grouping)
+        if sum(sizes) != self.topo.n or \
+                any(int(d) >= self.topo.n for g in plan.groups
+                    for d in g.devices):
+            return
+        self._seeded_sizes[grouping] = sizes
+        self._searcher(grouping, sizes).inject_plan(plan)
 
     def _searcher(self, tg, gg) -> EvolutionarySearch:
         key = (tg, gg)

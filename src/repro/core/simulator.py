@@ -34,6 +34,12 @@ class Event:
     # task-level events — the simulator never fills these.
     wave: Optional[int] = None
     occupancy: Optional[float] = None
+    # plan epoch (§6 online redeployment): which execution plan was live
+    # when the event happened.  The simulator always predicts a single
+    # plan, so simulated events stay at epoch 0; the engine bumps the
+    # epoch at every ``apply_plan`` swap so steady-state estimates never
+    # straddle a plan transition.
+    epoch: int = 0
 
 
 @dataclasses.dataclass

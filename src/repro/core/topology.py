@@ -228,6 +228,176 @@ def build_host(n: int, spec: GPUSpec = A100) -> Topology:
     return _build(devices, {})
 
 
+# ---------------------------------------------------------------------------
+# Topology drift (§6 online redeployment): constructible degradations
+# ---------------------------------------------------------------------------
+
+def topo_equal(a: Optional["Topology"], b: Optional["Topology"]) -> bool:
+    """Structural equality — same devices (spec/placement) and the same
+    latency/bandwidth matrices.  Used by the elasticity controller to
+    decide whether a topology feed actually drifted."""
+    if a is b:
+        return True
+    if a is None or b is None or a.n != b.n:
+        return False
+    for da, db in zip(a.devices, b.devices):
+        if (da.spec, da.machine, da.zone, da.region) != \
+                (db.spec, db.machine, db.zone, db.region):
+            return False
+    return np.array_equal(a.latency_s, b.latency_s) and \
+        np.array_equal(a.bandwidth_gbps, b.bandwidth_gbps)
+
+
+def degrade_links(topo: Topology, *, bw_factor: float = 0.05,
+                  lat_factor: float = 10.0,
+                  pairs: Optional[Sequence[Tuple[int, int]]] = None,
+                  regions: Optional[Sequence[str]] = None,
+                  fraction: float = 1.0, seed: int = 0) -> Topology:
+    """A degraded copy of `topo`: selected inter-device links lose
+    bandwidth (×bw_factor) and gain latency (×lat_factor).
+
+    Link selection, most specific first:
+      * ``pairs``   — explicit (a, b) device pairs (applied symmetrically);
+      * ``regions`` — two names degrade the links *between* those regions,
+        one name degrades every cross-machine link touching it;
+      * default     — every cross-machine link, subsampled to ``fraction``
+        with a seeded rng so scenarios are reproducible.
+
+    The diagonal (HBM) is never touched; the input topology is not
+    mutated."""
+    n = topo.n
+    mask = np.zeros((n, n), dtype=bool)
+    if pairs is not None:
+        for a, b in pairs:
+            mask[a, b] = mask[b, a] = True
+    else:
+        cross = np.array(
+            [[topo.devices[i].machine != topo.devices[j].machine
+              for j in range(n)] for i in range(n)])
+        if regions is not None:
+            regs = list(regions)
+            in_r = np.array([d.region in regs for d in topo.devices])
+            if len(regs) >= 2:
+                r0 = np.array([d.region == regs[0] for d in topo.devices])
+                r1 = np.array([d.region in regs[1:] for d in topo.devices])
+                mask = cross & (np.outer(r0, r1) | np.outer(r1, r0))
+            else:
+                mask = cross & (in_r[:, None] | in_r[None, :])
+        else:
+            mask = cross
+        if fraction < 1.0:
+            rng = np.random.default_rng(seed)
+            iu = np.triu_indices(n, k=1)
+            keep = rng.random(len(iu[0])) < fraction
+            sub = np.zeros((n, n), dtype=bool)
+            sub[iu[0][keep], iu[1][keep]] = True
+            sub |= sub.T
+            mask &= sub
+    np.fill_diagonal(mask, False)
+    lat = topo.latency_s.copy()
+    bw = topo.bandwidth_gbps.copy()
+    lat[mask] *= lat_factor
+    bw[mask] *= bw_factor
+    return Topology(list(topo.devices), lat, bw)
+
+
+def drop_devices(topo: Topology, ids: Sequence[int]) -> Topology:
+    """The topology with `ids` removed and the survivors re-indexed to a
+    dense 0..n'-1 id space (matrices restricted accordingly).  Plans built
+    against the old topology become invalid on the result — ``reschedule``
+    treats such incumbents as infinitely costly."""
+    gone = set(int(d) for d in ids)
+    keep = [d.id for d in topo.devices if d.id not in gone]
+    if not keep:
+        raise ValueError("cannot drop every device")
+    devices = [dataclasses.replace(topo.devices[d], id=i)
+               for i, d in enumerate(keep)]
+    idx = np.asarray(keep)
+    return Topology(devices, topo.latency_s[np.ix_(idx, idx)].copy(),
+                    topo.bandwidth_gbps[np.ix_(idx, idx)].copy())
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftEvent:
+    """One medium-granularity fleet/network change: from `iteration` on,
+    the environment looks like `topo`."""
+    iteration: int
+    description: str
+    topo: Topology
+
+
+@dataclasses.dataclass
+class DriftSchedule:
+    """A deterministic topology feed for tests/benchmarks: ``topo_at(it)``
+    returns the environment the fleet is in at iteration ``it`` (the base
+    topology until the first event fires)."""
+    base: Topology
+    events: List[DriftEvent]
+
+    def __post_init__(self):
+        self.events = sorted(self.events, key=lambda e: e.iteration)
+
+    def topo_at(self, iteration: int) -> Topology:
+        topo = self.base
+        for e in self.events:
+            if e.iteration <= iteration:
+                topo = e.topo
+        return topo
+
+    @classmethod
+    def generate(cls, base: Topology, *, seed: int = 0, n_events: int = 2,
+                 first_iteration: int = 5, every: int = 10,
+                 recover: bool = True) -> "DriftSchedule":
+        """Seeded random degradation scenario: `n_events` successive
+        cross-machine link degradations (random severity and coverage),
+        optionally followed by a recovery back to the base topology."""
+        rng = np.random.default_rng(seed)
+        events = []
+        it = first_iteration
+        for k in range(n_events):
+            bw_f = float(rng.uniform(0.02, 0.2))
+            lat_f = float(rng.uniform(5.0, 20.0))
+            frac = float(rng.uniform(0.5, 1.0))
+            events.append(DriftEvent(
+                it, f"degrade x{1 / bw_f:.0f} bw on {frac:.0%} of "
+                    f"cross-machine links",
+                degrade_links(base, bw_factor=bw_f, lat_factor=lat_f,
+                              fraction=frac, seed=seed + k)))
+            it += every
+        if recover:
+            events.append(DriftEvent(it, "network recovers", base))
+        return cls(base, events)
+
+
+DRIFT_SCENARIOS = ["degrade_cross", "degrade_severe", "drop_tail", "flaky"]
+
+
+def drift_scenario(name: str, base: Topology, *, at: int = 5,
+                   seed: int = 0) -> DriftSchedule:
+    """Named degradation scenarios for the launcher/benchmarks:
+      degrade_cross  — cross-machine bandwidth /20, latency ×10 at `at`;
+      degrade_severe — cross-machine bandwidth /100, latency ×50 at `at`;
+      drop_tail      — the last quarter of the fleet disappears at `at`;
+      flaky          — seeded multi-event drift (DriftSchedule.generate)."""
+    if name == "degrade_cross":
+        ev = DriftEvent(at, "cross-machine links degrade 20x",
+                        degrade_links(base, bw_factor=0.05, lat_factor=10.0))
+        return DriftSchedule(base, [ev])
+    if name == "degrade_severe":
+        ev = DriftEvent(at, "cross-machine links degrade 100x",
+                        degrade_links(base, bw_factor=0.01, lat_factor=50.0))
+        return DriftSchedule(base, [ev])
+    if name == "drop_tail":
+        tail = [d.id for d in base.devices[-max(base.n // 4, 1):]]
+        ev = DriftEvent(at, f"devices {tail} leave the fleet",
+                        drop_devices(base, tail))
+        return DriftSchedule(base, [ev])
+    if name == "flaky":
+        return DriftSchedule.generate(base, seed=seed, first_iteration=at)
+    raise ValueError(f"unknown drift scenario {name!r}; "
+                     f"options: {DRIFT_SCENARIOS}")
+
+
 def build_tpu_pool(n_v5e: int = 32, n_v4: int = 16, seed: int = 0) -> Topology:
     """TPU-native heterogeneous pool: a v5e slice + a v4 slice joined by DCN
     (the TPU analogue of the paper's cross-region setting)."""

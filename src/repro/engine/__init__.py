@@ -6,7 +6,22 @@ stage by stage, colocated tasks serialized, disjoint GPU groups run
 concurrently, async one-step off-policy double-buffering, and a measured
 ``Event`` timeline that shares dataclasses with ``core.simulator`` so
 measured-vs-predicted comparison is one function call.
+
+The plan-epoch model (§6 online redeployment): everything derived from
+the ``Plan`` — placements, lane partitioning, replay device availability,
+gen/train task ids — lives in a swappable ``PlanContext``, so a running
+session is a sequence of *plan epochs*.  ``Engine.apply_plan`` retires
+the live context at an iteration boundary: it replays a weight-migration
+event priced by ``core.redeploy.transition_cost``, re-seeds device
+availability at the migration end, drains or carries the async pipeline's
+pending bundle (the one-step-staleness invariant survives either way),
+and stamps every subsequent ``Event`` with the new epoch.  Trainer and
+optimizer state are owned by the trainer facade and cross the swap
+untouched; ``engine.elastic.ElasticController`` builds the §6 loop on
+top — watch a topology feed, ``reschedule`` with a warm-start budget,
+checkpoint through ``checkpoint.io``, and apply or reject the decision.
 """
-from repro.engine.executor import Engine, EngineResult  # noqa: F401
+from repro.engine.executor import (Engine, EngineResult,  # noqa: F401
+                                   MIGRATION_TASK, PlanContext)
 from repro.engine.pipeline import AsyncPipeline  # noqa: F401
 from repro.engine.placement import TaskPlacement, build_placements  # noqa: F401

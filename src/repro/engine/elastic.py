@@ -1,0 +1,109 @@
+"""Elasticity controller: the §6 online-redeployment loop over a live
+engine.
+
+``ElasticController`` watches a topology feed (a
+``core.topology.DriftSchedule`` or any ``iteration -> Topology``
+callable) and, at iteration boundaries, reacts to drift exactly as the
+paper prescribes: re-run the scheduler with a short warm-start budget
+(``core.redeploy.reschedule``), checkpoint the live trainer state through
+``checkpoint.io`` (the paper's "during model checkpointing"), and apply
+or reject the plan per the ``RedeployDecision`` — a ``switch=True``
+decision swaps the engine's plan context through ``Engine.apply_plan``
+with trainer/optimizer state untouched, a ``switch=False`` decision keeps
+the incumbent but still adopts the drifted topology for predictions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Callable, Dict, List, Optional, Union
+
+from repro.core.redeploy import RedeployDecision, reschedule
+from repro.core.topology import DriftSchedule, Topology, topo_equal
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticConfig:
+    budget: int = 150              # reschedule's warm-started eval budget
+    amortization_iters: int = 20   # horizon a new plan must pay back over
+    ckpt_dir: Optional[str] = None  # checkpoint around the switch when set
+    carry_pending: bool = True     # carry vs drain the async bundle
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class AdaptRecord:
+    """One reaction to observed drift (whether or not a swap happened)."""
+    iteration: int
+    decision: RedeployDecision
+    applied: bool                  # True when the engine swapped plans
+    epoch: int                     # engine plan epoch after the reaction
+    reschedule_s: float            # wall-clock spent in the scheduler
+    ckpt_path: Optional[str] = None
+    ckpt_bytes: int = 0
+    transition: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+
+class ElasticController:
+    """Drive ``poll(iteration)`` once per finished iteration (the
+    boundary where §6 allows a swap).  Drift is detected structurally —
+    the feed may return the same object every call."""
+
+    def __init__(self, trainer,
+                 feed: Union[DriftSchedule, Callable[[int], Topology]],
+                 cfg: Optional[ElasticConfig] = None):
+        self.trainer = trainer
+        self.feed = feed
+        self.cfg = cfg or ElasticConfig()
+        self.records: List[AdaptRecord] = []
+        self._topo = trainer.engine.topo
+
+    def _observe(self, iteration: int) -> Optional[Topology]:
+        if hasattr(self.feed, "topo_at"):
+            return self.feed.topo_at(iteration)
+        return self.feed(iteration)
+
+    def poll(self, iteration: int) -> Optional[AdaptRecord]:
+        """Check the feed; on drift, reschedule / checkpoint / apply.
+        Returns the record when drift was handled, None when quiet."""
+        topo = self._observe(iteration)
+        if topo is None or topo_equal(topo, self._topo):
+            return None
+        topo_old, self._topo = self._topo, topo
+        trainer, cfg = self.trainer, self.cfg
+        t0 = time.monotonic()
+        decision = reschedule(topo, trainer.wf, trainer.plan,
+                              budget=cfg.budget,
+                              amortization_iters=cfg.amortization_iters,
+                              seed=cfg.seed, topo_old=topo_old)
+        resched_s = time.monotonic() - t0
+
+        # checkpoint the live state before touching the execution plan —
+        # §6 applies the new plan "immediately after checkpointing", and
+        # a failed migration can restore from here
+        ckpt_path, ckpt_bytes = None, 0
+        if cfg.ckpt_dir:
+            from repro.checkpoint import io as ckpt_io
+            ckpt_path = os.path.join(
+                cfg.ckpt_dir, f"elastic_iter{iteration:05d}.msgpack")
+            ckpt_bytes = ckpt_io.save(ckpt_path, trainer.state_tree())
+
+        transition: Dict[str, float] = {}
+        if decision.switch:
+            transition = trainer.engine.apply_plan(
+                decision.plan, topo=topo,
+                carry_pending=cfg.carry_pending)
+        else:
+            # stay on the incumbent, but predictions must price the
+            # drifted environment
+            trainer.engine.update_topology(topo)
+        rec = AdaptRecord(iteration, decision, decision.switch,
+                          trainer.engine.epoch, resched_s,
+                          ckpt_path, ckpt_bytes, transition)
+        self.records.append(rec)
+        return rec
+
+    @property
+    def swaps(self) -> List[AdaptRecord]:
+        return [r for r in self.records if r.applied]

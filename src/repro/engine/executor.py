@@ -12,6 +12,14 @@ through the same device-availability logic as ``core.simulator.simulate``
 — producing an ``Event`` timeline on the *plan's* device ids that shares
 the ``Event``/``SimResult`` dataclasses with the simulator, so a Fig-7
 style measured-vs-predicted comparison is ``compare_with_simulator()``.
+
+Plan epochs (§6 online redeployment): everything the engine derives from
+the scheduler's ``Plan`` lives in a swappable ``PlanContext``; a running
+session swaps plans at an iteration boundary through ``apply_plan`` —
+trainer/optimizer state is untouched, a weight-migration event priced by
+``core.redeploy.transition_cost`` is replayed onto the timeline, and all
+subsequent events carry the new plan epoch so steady-state estimates
+never straddle a swap.
 """
 from __future__ import annotations
 
@@ -22,6 +30,7 @@ from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Dict, List, Optional, Sequence
 
 import jax
+import numpy as np
 
 from repro.core.costmodel import CostModel
 from repro.core.plan import Plan, predicted_occupancy
@@ -32,12 +41,33 @@ from repro.engine import tasks as tasks_mod
 from repro.engine.pipeline import AsyncPipeline, sync_actor_weights
 from repro.engine.placement import build_placements
 
+# pseudo task id for the weight-migration event a plan swap replays onto
+# the timeline (real workflow tasks are 0..n_tasks-1)
+MIGRATION_TASK = -1
+
 
 @dataclasses.dataclass
 class EngineResult:
     metrics: Dict[str, float]
     events: List[Event]          # this iteration's replayed timeline
     iteration: int
+    epoch: int = 0               # plan epoch the iteration executed under
+
+
+@dataclasses.dataclass
+class PlanContext:
+    """Everything the engine derives from one ``Plan`` — the swappable
+    unit of the plan-epoch model.  ``apply_plan`` builds a fresh context;
+    nothing in it survives a swap except through the explicit transition
+    (device availability is re-seeded at the migration end time)."""
+    epoch: int
+    plan: Plan
+    topo: Optional[Topology]
+    placements: Dict[int, Any]            # task -> TaskPlacement
+    gen_task: int
+    actor_train: int
+    dev_free: Dict[int, float]            # plan-device availability (replay)
+    start_iter: int = 0                   # first engine iteration in epoch
 
 
 class Engine:
@@ -45,27 +75,14 @@ class Engine:
                  *, topo: Optional[Topology] = None,
                  asynchronous: Optional[bool] = None,
                  devices: Optional[Sequence] = None):
-        missing = set(range(wf.n_tasks)) - set(plan.parallel)
-        if missing:
-            raise ValueError(f"plan does not cover workflow tasks {missing}")
         self.wf = wf
-        self.plan = plan
         self.state = state
-        self.topo = topo
-        self.placements = build_placements(plan, range(wf.n_tasks), devices)
+        self._devices = list(devices) if devices is not None else None
         if asynchronous is None:
             asynchronous = not wf.synchronous
         self.pipeline = AsyncPipeline(asynchronous)
-        self._gen_task = next(t for t in range(wf.n_tasks)
-                              if wf.task(t).kind == TaskKind.GEN)
-        self._actor_train = next(
-            t for t in range(wf.n_tasks)
-            if wf.task(t).kind == TaskKind.TRAIN
-            and wf.task(t).name.startswith("actor"))
-        # replay state (plan-device availability), mirrors the simulator
-        self._dev_free: Dict[int, float] = {
-            int(d): 0.0 for t in range(wf.n_tasks)
-            for d in plan.assignment[t].reshape(-1)}
+        self.ctx = self._make_context(plan, topo, epoch=0, start_iter=0)
+        self.ctx_history: List[PlanContext] = []   # retired epochs, oldest first
         self._done_at: Dict[tuple, float] = {}
         self._sync_done = 0.0
         self._iter = 0
@@ -82,6 +99,113 @@ class Engine:
         self._wave_pred_sum = 0.0
         self._wave_calls = 0
         self._t0 = time.monotonic()
+
+    # -- plan context ---------------------------------------------------
+    def _make_context(self, plan: Plan, topo: Optional[Topology],
+                      epoch: int, start_iter: int) -> PlanContext:
+        missing = set(range(self.wf.n_tasks)) - set(plan.parallel)
+        if missing:
+            raise ValueError(f"plan does not cover workflow tasks {missing}")
+        placements = build_placements(plan, range(self.wf.n_tasks),
+                                      self._devices)
+        gen_task = next(t for t in range(self.wf.n_tasks)
+                        if self.wf.task(t).kind == TaskKind.GEN)
+        actor_train = next(
+            t for t in range(self.wf.n_tasks)
+            if self.wf.task(t).kind == TaskKind.TRAIN
+            and self.wf.task(t).name.startswith("actor"))
+        dev_free = {int(d): 0.0 for t in range(self.wf.n_tasks)
+                    for d in plan.assignment[t].reshape(-1)}
+        return PlanContext(epoch, plan, topo, placements, gen_task,
+                           actor_train, dev_free, start_iter)
+
+    # back-compat accessors: the live context is authoritative
+    @property
+    def plan(self) -> Plan:
+        return self.ctx.plan
+
+    @property
+    def topo(self) -> Optional[Topology]:
+        return self.ctx.topo
+
+    @property
+    def placements(self) -> Dict[int, Any]:
+        return self.ctx.placements
+
+    @property
+    def epoch(self) -> int:
+        return self.ctx.epoch
+
+    @property
+    def _gen_task(self) -> int:
+        return self.ctx.gen_task
+
+    @property
+    def _actor_train(self) -> int:
+        return self.ctx.actor_train
+
+    @property
+    def _dev_free(self) -> Dict[int, float]:
+        return self.ctx.dev_free
+
+    def update_topology(self, topo: Topology) -> None:
+        """Adopt a drifted topology *without* swapping plans (the elastic
+        controller stays on the incumbent): predictions now price the new
+        environment; no epoch bump, no migration, no placement rebuild."""
+        self.ctx = dataclasses.replace(self.ctx, topo=topo)
+
+    def apply_plan(self, plan: Plan, *, topo: Optional[Topology] = None,
+                   carry_pending: bool = True) -> Dict[str, float]:
+        """Swap the execution plan at an iteration boundary (§6 online
+        redeployment) without losing trainer/optimizer state.
+
+        The swap replays a weight-migration event priced by
+        ``core.redeploy.transition_cost`` (old plan -> new plan on the
+        new topology): it starts once every device of the outgoing plan
+        is quiesced, occupies the transition window, and re-seeds the new
+        plan's device availability at its end — so the replayed timeline
+        accounts for the §6 "applied immediately after checkpointing"
+        pause.  Generation additionally waits for the migrated weights
+        the way it waits for a weight sync.
+
+        The async one-step-staleness invariant is preserved explicitly:
+        with ``carry_pending`` (default) the in-flight rollout bundle
+        generated under the old plan is carried across the swap and
+        trained next iteration (still exactly one sync behind); with
+        ``carry_pending=False`` the bundle is drained and the pipeline
+        refills, making the first post-swap iteration a fill iteration.
+
+        Returns transition telemetry (seconds, epoch, migration window).
+        """
+        from repro.core import redeploy
+        old = self.ctx
+        topo = topo if topo is not None else old.topo
+        trans_s = 0.0
+        if topo is not None:
+            trans_s = redeploy.transition_cost(topo, self.wf, old.plan,
+                                               plan, topo_old=old.topo)
+        # migration window on the replay clock: begins when the outgoing
+        # plan's devices are all idle (iteration boundary + in-flight sync)
+        t0 = max(list(old.dev_free.values()) + [self._sync_done])
+        t1 = t0 + trans_s
+        new_epoch = old.epoch + 1
+        self.timeline.append(Event(t0, "start", self._iter, MIGRATION_TASK,
+                                   epoch=new_epoch))
+        self.timeline.append(Event(t1, "end", self._iter, MIGRATION_TASK,
+                                   epoch=new_epoch))
+        ctx = self._make_context(plan, topo, epoch=new_epoch,
+                                 start_iter=self._iter)
+        for d in ctx.dev_free:
+            ctx.dev_free[d] = t1
+        self._sync_done = max(self._sync_done, t1)
+        dropped = 0
+        if not carry_pending:
+            dropped = int(self.pipeline.drain() is not None)
+        self.ctx_history.append(old)
+        self.ctx = ctx
+        return {"transition_cost_s": trans_s, "epoch": float(new_epoch),
+                "migration_start_s": t0, "migration_end_s": t1,
+                "dropped_bundles": float(dropped)}
 
     # -- stage dispatch ------------------------------------------------
     def _lanes(self, stage: Sequence[int]) -> List[List[int]]:
@@ -118,6 +242,7 @@ class Engine:
         """Replay measured durations through the simulator's scheduling
         rules on the plan's device ids (same event ordering semantics)."""
         it = self._iter
+        epoch = self.ctx.epoch
         events: List[Event] = []
         for t in sorted(durations):
             task = self.wf.task(t)
@@ -130,8 +255,8 @@ class Engine:
             end = start + durations[t]
             for d in devs:
                 self._dev_free[d] = end
-            events.append(Event(start, "start", it, t))
-            events.append(Event(end, "end", it, t))
+            events.append(Event(start, "start", it, t, epoch=epoch))
+            events.append(Event(end, "end", it, t, epoch=epoch))
             self._done_at[(it, t)] = end
         if trained:
             train_end = self._done_at[(it, self._actor_train)]
@@ -173,7 +298,7 @@ class Engine:
                     events = self._replay_iteration(durations, 0.0,
                                                     trained=False)
                     return EngineResult(self.state.fill_metrics(), events,
-                                        self._iter - 1)
+                                        self._iter - 1, self.ctx.epoch)
                 bb["bundle"] = bundle
                 self.pipeline.record(self._iter, bundle,
                                      self.state.weight_version)
@@ -186,7 +311,7 @@ class Engine:
         metrics = dict(bb["metrics"])
         metrics["sync_gb"] = nbytes / 1e9
         events = self._replay_iteration(durations, sync_dur, trained=True)
-        return EngineResult(metrics, events, self._iter - 1)
+        return EngineResult(metrics, events, self._iter - 1, self.ctx.epoch)
 
     # -- decode-wave telemetry -------------------------------------------
     def _record_gen_stats(self, bb: Dict[str, Any]) -> None:
@@ -220,10 +345,10 @@ class Engine:
         for w, (t0, t1, occ, _adm) in enumerate(rounds):
             self.wave_timeline.append(Event(
                 t0 - self._t0, "start", self._iter, self._gen_task,
-                wave=w, occupancy=occ))
+                wave=w, occupancy=occ, epoch=self.ctx.epoch))
             self.wave_timeline.append(Event(
                 t1 - self._t0, "end", self._iter, self._gen_task,
-                wave=w, occupancy=occ))
+                wave=w, occupancy=occ, epoch=self.ctx.epoch))
 
     def wave_occupancy_summary(self) -> Dict[str, float]:
         """Measured mean decode-slot occupancy (over all iterations) vs
@@ -247,18 +372,39 @@ class Engine:
         return out
 
     # -- measured vs predicted -------------------------------------------
+    def _epoch_gen_starts(self, ctx: PlanContext) -> List[float]:
+        return sorted(e.time for e in self.timeline
+                      if e.task == ctx.gen_task and e.kind == "start"
+                      and e.epoch == ctx.epoch)
+
     def measured_result(self) -> SimResult:
-        """Measured timeline in the simulator's SimResult shape."""
+        """Measured timeline in the simulator's SimResult shape.
+
+        The steady-state iteration time is derived from generation-start
+        deltas *within the current plan epoch* — a swap between the last
+        two generation starts would otherwise fold the migration window
+        (and the old plan's cadence) into the estimate."""
         if not self.timeline:
             return SimResult(0.0, 0.0, 0.0, [])
         makespan = max(e.time for e in self.timeline)
-        gen_starts = sorted(e.time for e in self.timeline
-                            if e.task == self._gen_task
-                            and e.kind == "start")
-        if len(gen_starts) >= 3:
+        gen_starts = self._epoch_gen_starts(self.ctx)
+        # epoch 0's first delta absorbs jit compilation, so demand one
+        # extra start there; post-swap epochs run warm
+        need = 3 if self.ctx.epoch == 0 else 2
+        if len(gen_starts) >= need:
             iter_time = gen_starts[-1] - gen_starts[-2]
         else:
-            iter_time = makespan / max(self._iter, 1)
+            # too few starts for a delta: average over the live epoch's
+            # own span (post-migration), never over retired epochs or
+            # the migration window
+            span = [e.time for e in self.timeline
+                    if e.epoch == self.ctx.epoch
+                    and e.task != MIGRATION_TASK]
+            epoch_iters = max(self._iter - self.ctx.start_iter, 1)
+            if span:
+                iter_time = (max(span) - min(span)) / epoch_iters
+            else:
+                iter_time = makespan / max(self._iter, 1)
         iter_time = max(iter_time, 1e-9)
         return SimResult(iter_time, makespan, self._samples / iter_time,
                          sorted(self.timeline, key=lambda e: e.time))
@@ -267,15 +413,45 @@ class Engine:
                                n_iterations: Optional[int] = None
                                ) -> Dict[str, float]:
         """Fig-7 style: measured iteration time vs the cost model's
-        event-driven prediction for the same (wf, plan) on `topo`."""
+        event-driven prediction for the same (wf, plan) on `topo` —
+        plan-epoch aware, so both sides describe the *current* plan."""
         if self.topo is None:
             raise ValueError("engine was built without a Topology")
+        epoch_iters = self._iter - self.ctx.start_iter
         sim = simulate(self.topo, self.wf, self.plan,
-                       n_iterations=n_iterations or max(self._iter, 4),
+                       n_iterations=n_iterations or max(epoch_iters, 4),
                        cost_model=cost_model)
         meas = self.measured_result()
         return {"measured_iter_s": meas.iteration_time,
                 "predicted_iter_s": sim.iteration_time,
                 "ratio": meas.iteration_time / sim.iteration_time,
                 "measured_makespan_s": meas.makespan,
-                "predicted_makespan_s": sim.makespan}
+                "predicted_makespan_s": sim.makespan,
+                "epoch": float(self.ctx.epoch)}
+
+    def epoch_report(self, cost_model: Optional[CostModel] = None
+                     ) -> List[Dict[str, float]]:
+        """Per plan-epoch measured-vs-predicted iteration time: one row
+        per epoch (retired and live), each measured from gen-start deltas
+        strictly inside that epoch and predicted by simulating that
+        epoch's own plan on that epoch's own topology."""
+        rows = []
+        for ctx in self.ctx_history + [self.ctx]:
+            starts = self._epoch_gen_starts(ctx)
+            measured = float("nan")
+            if len(starts) >= 2:
+                measured = starts[-1] - starts[-2]
+            predicted = float("nan")
+            if ctx.topo is not None:
+                predicted = simulate(
+                    ctx.topo, self.wf, ctx.plan,
+                    n_iterations=max(len(starts), 4),
+                    cost_model=cost_model).iteration_time
+            rows.append({"epoch": ctx.epoch,
+                         "iterations": len(starts),
+                         "measured_iter_s": measured,
+                         "predicted_iter_s": predicted,
+                         "ratio": measured / predicted
+                         if predicted and np.isfinite(predicted)
+                         else float("nan")})
+        return rows

@@ -44,6 +44,15 @@ class AsyncPipeline:
         pending, self._pending = self._pending, fresh
         return pending
 
+    def drain(self) -> Optional[Dict[str, Any]]:
+        """Explicitly give up the pending bundle (plan swap with drain
+        semantics): the in-flight rollouts generated under the outgoing
+        plan are discarded and the pipeline refills, so the first
+        iteration after the swap is a fill iteration.  Returns the
+        dropped bundle (None when nothing was pending)."""
+        pending, self._pending = self._pending, None
+        return pending
+
     def record(self, iteration: int, bundle: Dict[str, Any],
                weight_version: int) -> None:
         self.records.append(PipelineRecord(

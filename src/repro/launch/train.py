@@ -11,6 +11,16 @@ cost-model iteration time:
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --smoke \
         --rl grpo --steps 10 --batch 8 --search-budget 120
+
+``--drift <scenario>`` additionally runs the §6 elasticity loop: a named
+topology drift (see ``core.topology.DRIFT_SCENARIOS``) fires mid-run, the
+elastic controller reschedules with a warm-start budget at the iteration
+boundary, checkpoints trainer state, and swaps the plan when the
+``RedeployDecision`` says so — reporting measured-vs-predicted iteration
+time per plan epoch:
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --smoke \
+        --rl grpo --steps 12 --batch 8 --drift drop_tail --drift-at 4
 """
 from __future__ import annotations
 
@@ -84,6 +94,18 @@ def run_rl(args) -> None:
                   asynchronous=args.asynchronous)
     trainer = RLTrainer(cfg, rl, task, jax.random.PRNGKey(0), plan=r.plan,
                         topo=topo, wf=wf)
+
+    controller = None
+    if args.drift:
+        from repro.engine.elastic import ElasticConfig, ElasticController
+        drift_at = args.drift_at if args.drift_at is not None \
+            else max(args.steps // 2, 1)
+        schedule = topology.drift_scenario(args.drift, topo, at=drift_at)
+        controller = ElasticController(
+            trainer, schedule,
+            ElasticConfig(budget=args.search_budget,
+                          ckpt_dir="results/elastic_ckpt"))
+
     ds = iter(PromptDataset(task, batch=args.batch, seed=1))
     key = jax.random.PRNGKey(42)
     for step in range(args.steps):
@@ -94,6 +116,21 @@ def run_rl(args) -> None:
         print(f"iter {step:4d} reward={m['reward_mean']:.3f} "
               f"kl={m['kl']:.3f} sync={m['sync_gb'] * 1e3:.1f}MB "
               f"({time.time() - t0:.2f}s)")
+        if controller is not None:
+            rec = controller.poll(step)
+            if rec is not None:
+                d = rec.decision
+                print(f"  drift: reschedule in {rec.reschedule_s:.1f}s -> "
+                      f"switch={d.switch} old={d.old_cost * 1e3:.3f}ms "
+                      f"new={d.new_cost * 1e3:.3f}ms "
+                      f"trans={d.transition_cost_s * 1e3:.3f}ms "
+                      f"epoch={rec.epoch} "
+                      f"ckpt={rec.ckpt_bytes / 1e6:.1f}MB")
+    if controller is not None:
+        for row in trainer.engine.epoch_report():
+            print(f"epoch {row['epoch']}: {row['iterations']} iters, "
+                  f"measured {row['measured_iter_s'] * 1e3:.1f}ms/iter vs "
+                  f"predicted {row['predicted_iter_s'] * 1e3:.3f}ms/iter")
     cmp = trainer.engine.compare_with_simulator()
     print(f"measured {cmp['measured_iter_s'] * 1e3:.1f}ms/iter vs "
           f"cost-model {cmp['predicted_iter_s'] * 1e3:.3f}ms/iter "
@@ -118,6 +155,12 @@ def main():
                     help="testbed scenario the scheduler plans against")
     ap.add_argument("--search-budget", type=int, default=120,
                     help="scheduler budget in cost-model evaluations")
+    ap.add_argument("--drift", default=None,
+                    help="inject a named topology drift mid-run and react "
+                         "elastically (with --rl); see "
+                         "core.topology.DRIFT_SCENARIOS")
+    ap.add_argument("--drift-at", type=int, default=None,
+                    help="iteration the drift fires at (default steps//2)")
     args = ap.parse_args()
 
     if args.rl:

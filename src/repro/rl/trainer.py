@@ -117,9 +117,43 @@ class RLTrainer:
         if plan is None:
             host_topo, plan = default_plan(self.wf)
             topo = topo if topo is not None else host_topo
-        self.plan = plan
         self.engine = Engine(self.wf, plan, self, topo=topo,
                              asynchronous=rl_cfg.asynchronous)
+
+    @property
+    def plan(self):
+        """The engine's *live* plan — after an elastic swap
+        (``engine.apply_plan``) this tracks the new plan epoch."""
+        return self.engine.plan
+
+    # -- checkpointable state (§6: what must survive a plan swap) -------
+    def state_tree(self) -> Dict[str, object]:
+        """The full live training state as one pytree for
+        ``checkpoint.io.save``/``restore``: parameters, optimizer state,
+        the generation replica and the weight-sync version counter.
+        Execution state (plan, placements, timeline) is deliberately
+        excluded — it is rebuilt from the plan on restore."""
+        tree: Dict[str, object] = {
+            "actor": self.actor, "ref": self.ref,
+            "actor_opt": self.actor_opt, "gen_params": self.gen_params,
+            "weight_version": jnp.asarray(self.weight_version, jnp.int32),
+        }
+        if self.rl.algorithm == "ppo":
+            tree["critic"] = self.critic
+            tree["value_head"] = self.value_head
+            tree["critic_opt"] = self.critic_opt
+        return tree
+
+    def load_state_tree(self, tree: Dict[str, object]) -> None:
+        self.actor = tree["actor"]
+        self.ref = tree["ref"]
+        self.actor_opt = tree["actor_opt"]
+        self.gen_params = tree["gen_params"]
+        self.weight_version = int(tree["weight_version"])
+        if self.rl.algorithm == "ppo":
+            self.critic = tree["critic"]
+            self.value_head = tree["value_head"]
+            self.critic_opt = tree["critic_opt"]
 
     # ------------------------------------------------------------------
     def _jit(self):

@@ -1,0 +1,474 @@
+"""Elastic plan-swap tests (§6 online redeployment).
+
+- transition cost: moved bytes route over the bottleneck (min) link of
+  each task's chosen paths, pinned on a two-region testbed;
+- topology drift primitives: degrade_links / drop_devices / DriftSchedule;
+- Engine.apply_plan: plan-epoch semantics, state preservation, epoch-aware
+  measured-vs-predicted, async one-step staleness across the swap;
+- swap-to-identical-plan == no-swap, bitwise, on training metrics;
+- checkpoint round-trips of the full live trainer state tree;
+- reschedule warm start: an undisturbed topology rediscovers the
+  incumbent (switch=False, challenger never worse).
+"""
+import math
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import enumerate as enum_mod, redeploy, topology, workflow
+from repro.core.plan import BYTES_BF16, check_constraints
+from repro.core.sha import HybridScheduler
+from repro.data.synthetic import AdditionTask, VOCAB_SIZE
+from repro.engine.elastic import ElasticConfig, ElasticController
+from repro.engine.executor import MIGRATION_TASK
+from repro.models.config import ModelConfig
+from repro.rl.trainer import RLConfig, RLTrainer
+
+KEY = jax.random.PRNGKey(0)
+
+
+def tiny_cfg():
+    return ModelConfig(name="el-tiny", n_layers=2, d_model=64, n_heads=2,
+                       n_kv_heads=2, head_dim=32, d_ff=128,
+                       vocab_size=VOCAB_SIZE, dtype="float32")
+
+
+def reference_pool():
+    return topology.build_testbed("single_region",
+                                  counts={"A100": 4, "L4": 4})
+
+
+def make_wf(cfg, task, *, asynchronous=False, batch=1):
+    spec = workflow.LLMSpec.from_model_config(cfg)
+    return workflow.make_workflow("grpo", spec,
+                                  synchronous=not asynchronous,
+                                  n_rollouts=4, seq_in=task.prompt_len,
+                                  seq_out=4, global_batch=batch)
+
+
+def grouped_plan(topo, wf, grouping):
+    sizes = enum_mod.proportional_sizes(wf, grouping, topo.n)
+    plan = enum_mod.build_plan(topo, wf, grouping, sizes,
+                               list(range(topo.n)))
+    ok, msg = check_constraints(topo, wf, plan)
+    assert ok, msg
+    return plan
+
+
+def make_trainer(asynchronous=False, grouping="gen|rest"):
+    cfg = tiny_cfg()
+    task = AdditionTask(max_operand=9)
+    topo = reference_pool()
+    wf = make_wf(cfg, task, asynchronous=asynchronous)
+    if grouping == "gen|rest":
+        g = tuple(sorted(((0,), tuple(range(1, wf.n_tasks)))))
+    else:
+        g = (tuple(range(wf.n_tasks)),)
+    plan = grouped_plan(topo, wf, g)
+    rl = RLConfig(algorithm="grpo", n_rollouts=4, max_new_tokens=4,
+                  asynchronous=asynchronous)
+    trainer = RLTrainer(cfg, rl, task, KEY, plan=plan, topo=topo, wf=wf)
+    return trainer, topo, wf
+
+
+def run_iters(trainer, n, batch=4, seed=0):
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(7)
+    out = []
+    for _ in range(n):
+        prompts, answers = trainer.task.sample_batch(rng, batch)
+        key, k = jax.random.split(key)
+        out.append(trainer.iteration(prompts, answers, k))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# transition cost (satellite: bottleneck routing)
+# ---------------------------------------------------------------------------
+
+def two_region_topo():
+    """4 devices, two regions; asymmetric cross-region bandwidths so the
+    best-link-anywhere (old bug) and bottleneck routings disagree."""
+    devs = [topology.Device(i, topology.A100, machine=i // 2, zone=0,
+                            region="east" if i < 2 else "west")
+            for i in range(4)]
+    lat = np.full((4, 4), 1e-3)
+    bw = np.array([
+        #  0     1     2     3
+        [2039., 100., 8.0, 1.0],   # 0 (east)
+        [100., 2039., 4.0, 2.0],   # 1 (east)
+        [8.0, 4.0, 2039., 100.],   # 2 (west)
+        [1.0, 2.0, 100., 2039.],   # 3 (west)
+    ])
+    return topology.Topology(devs, lat, bw)
+
+
+def plan_on(wf, devices_per_task):
+    """Minimal plan stub: every task dp=|devs|, pp=tp=1."""
+    from repro.core.plan import Plan, TaskGroup
+    parallel, assignment = {}, {}
+    for t, devs in devices_per_task.items():
+        parallel[t] = (len(devs), 1, 1)
+        assignment[t] = np.array(devs).reshape(len(devs), 1, 1)
+    groups = (TaskGroup(tuple(devices_per_task),
+                        tuple(sorted({d for ds in devices_per_task.values()
+                                      for d in ds}))),)
+    return Plan(groups, parallel, assignment)
+
+
+def test_transition_cost_routes_over_bottleneck():
+    topo = two_region_topo()
+    cfg = tiny_cfg()
+    task = AdditionTask(max_operand=9)
+    wf = make_wf(cfg, task)
+    n_tasks = wf.n_tasks
+    # only task 0 moves: east {0, 1} -> west {2, 3}
+    old = plan_on(wf, {t: [0, 1] for t in range(n_tasks)})
+    new_assign = {t: [0, 1] for t in range(n_tasks)}
+    new_assign[0] = [2, 3]
+    new = plan_on(wf, new_assign)
+
+    # chosen path per destination is its best source link (max over
+    # sources); the task completes at the slowest chosen link (min over
+    # destinations): dest 2 <- max(8, 4) = 8, dest 3 <- max(1, 2) = 2
+    bottleneck = 2.0
+    w = wf.task(0).model.total_weight_count
+    expected = BYTES_BF16 * w * 2 / 2 / (bottleneck * 1e9)
+    got = redeploy.transition_cost(topo, wf, old, new)
+    assert got == pytest.approx(expected, rel=1e-12)
+    # the old implementation took max beta over ALL (old, moved) pairs
+    # (= 8.0 here) — ensure we are NOT doing that
+    assert got > BYTES_BF16 * w / (8.0 * 1e9) * 0.99
+
+    # unchanged plan moves nothing
+    assert redeploy.transition_cost(topo, wf, old, old) == 0.0
+
+
+def test_reindexed_ids_detected_against_old_topology():
+    """drop_devices densely re-indexes survivors, so a surviving id can
+    alias a different physical device after a non-suffix drop; with the
+    old topology in hand both transition_cost and reschedule must trust
+    identity, not raw ids."""
+    topo = two_region_topo()
+    cfg = tiny_cfg()
+    task = AdditionTask(max_operand=9)
+    wf = make_wf(cfg, task)
+    small = topology.drop_devices(topo, [0])
+    # new id space: 0 <- old 1 (east, unchanged identity), 1 <- old 2
+    # (west — id 1 used to be east!), 2 <- old 3 (west, unchanged)
+    old = plan_on(wf, {t: [1, 2] for t in range(wf.n_tasks)})
+    new = plan_on(wf, {t: [0, 1] for t in range(wf.n_tasks)})
+    naive = redeploy.transition_cost(small, wf, old, new)
+    aware = redeploy.transition_cost(small, wf, old, new, topo_old=topo)
+    # identity-aware: old id 1 no longer names the same device, so only
+    # old id 2 (now west) can serve — different source set, different cost
+    assert aware != naive
+    # an incumbent whose ids changed identity is priced infeasible
+    d = redeploy.reschedule(small, wf, old, budget=40, topo_old=topo)
+    assert d.old_cost == math.inf
+
+
+def test_transition_cost_ignores_dropped_sources():
+    topo = two_region_topo()
+    cfg = tiny_cfg()
+    wf = make_wf(cfg, AdditionTask(max_operand=9))
+    small = topology.drop_devices(topo, [2, 3])
+    # old plan lived on now-dropped devices: no surviving source — the
+    # move is priced as free (checkpoint restore covers it), not a crash
+    old = plan_on(wf, {t: [2, 3] for t in range(wf.n_tasks)})
+    new = plan_on(wf, {t: [0, 1] for t in range(wf.n_tasks)})
+    assert redeploy.transition_cost(small, wf, old, new) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# drift primitives
+# ---------------------------------------------------------------------------
+
+def test_degrade_links():
+    topo = reference_pool()
+    d = topology.degrade_links(topo, bw_factor=0.1, lat_factor=10.0)
+    assert d is not topo and topo.n == d.n
+    cross = [(i, j) for i in range(topo.n) for j in range(topo.n)
+             if i != j and topo.devices[i].machine != topo.devices[j].machine]
+    for i, j in cross:
+        assert d.bandwidth_gbps[i, j] == pytest.approx(
+            topo.bandwidth_gbps[i, j] * 0.1)
+        assert d.latency_s[i, j] == pytest.approx(
+            topo.latency_s[i, j] * 10.0)
+    # intra-machine links and HBM diagonal untouched
+    same = [(i, j) for i in range(topo.n) for j in range(topo.n)
+            if topo.devices[i].machine == topo.devices[j].machine]
+    for i, j in same:
+        assert d.bandwidth_gbps[i, j] == topo.bandwidth_gbps[i, j]
+    # input topology not mutated
+    assert not topology.topo_equal(topo, d)
+    # seeded subsampling is deterministic
+    a = topology.degrade_links(topo, fraction=0.5, seed=3)
+    b = topology.degrade_links(topo, fraction=0.5, seed=3)
+    assert topology.topo_equal(a, b)
+
+
+def test_drop_devices_reindexes():
+    topo = reference_pool()
+    d = topology.drop_devices(topo, [0, 5])
+    assert d.n == topo.n - 2
+    assert [dev.id for dev in d.devices] == list(range(d.n))
+    kept = [i for i in range(topo.n) if i not in (0, 5)]
+    for new_i, old_i in enumerate(kept):
+        assert d.devices[new_i].spec == topo.devices[old_i].spec
+        for new_j, old_j in enumerate(kept):
+            assert d.bandwidth_gbps[new_i, new_j] == \
+                topo.bandwidth_gbps[old_i, old_j]
+    with pytest.raises(ValueError):
+        topology.drop_devices(topo, list(range(topo.n)))
+
+
+def test_drift_schedule():
+    topo = reference_pool()
+    deg = topology.degrade_links(topo, bw_factor=0.1)
+    sch = topology.DriftSchedule(topo, [
+        topology.DriftEvent(8, "recover", topo),
+        topology.DriftEvent(3, "degrade", deg),
+    ])
+    assert sch.topo_at(0) is topo
+    assert sch.topo_at(3) is deg
+    assert sch.topo_at(7) is deg
+    assert sch.topo_at(8) is topo
+    gen = topology.DriftSchedule.generate(topo, seed=5, n_events=2)
+    gen2 = topology.DriftSchedule.generate(topo, seed=5, n_events=2)
+    assert len(gen.events) == 3           # 2 degradations + recovery
+    for e1, e2 in zip(gen.events, gen2.events):
+        assert topology.topo_equal(e1.topo, e2.topo)
+    for name in topology.DRIFT_SCENARIOS:
+        s = topology.drift_scenario(name, topo, at=2)
+        assert not topology.topo_equal(s.topo_at(2), topo) or name == "flaky"
+
+
+# ---------------------------------------------------------------------------
+# engine plan swap
+# ---------------------------------------------------------------------------
+
+def test_apply_plan_swaps_context():
+    trainer, topo, wf = make_trainer()
+    run_iters(trainer, 2)
+    old_plan = trainer.plan
+    colocated = grouped_plan(topo, wf, (tuple(range(wf.n_tasks)),))
+    info = trainer.engine.apply_plan(colocated, topo=topo)
+    assert trainer.engine.epoch == 1
+    assert trainer.plan is colocated          # trainer tracks the engine
+    assert trainer.engine.ctx_history[0].plan is old_plan
+    run_iters(trainer, 2)
+    # events carry their epoch; the migration marker sits between them
+    epochs = {e.epoch for e in trainer.engine.timeline}
+    assert epochs == {0, 1}
+    mig = [e for e in trainer.engine.timeline if e.task == MIGRATION_TASK]
+    assert len(mig) == 2
+    assert mig[1].time - mig[0].time == pytest.approx(
+        info["transition_cost_s"])
+    # post-swap replay runs on the new plan's devices, starting after the
+    # migration window
+    post = [e for e in trainer.engine.timeline
+            if e.epoch == 1 and e.task != MIGRATION_TASK]
+    assert post and min(e.time for e in post) >= info["migration_end_s"]
+
+
+def test_apply_plan_preserves_trainer_state():
+    trainer, topo, wf = make_trainer()
+    metrics_before = run_iters(trainer, 2)
+    wv = trainer.weight_version
+    actor_before = trainer.actor
+    colocated = grouped_plan(topo, wf, (tuple(range(wf.n_tasks)),))
+    trainer.engine.apply_plan(colocated, topo=topo)
+    # swap touches no training state
+    assert trainer.weight_version == wv
+    assert trainer.actor is actor_before
+    metrics_after = run_iters(trainer, 2)
+    assert trainer.weight_version == wv + 2   # monotone, no reset
+    assert all(np.isfinite(m["loss"]) for m in metrics_before + metrics_after)
+
+
+def test_swap_to_identical_plan_is_bitwise_noop():
+    ms = {}
+    for swap in (False, True):
+        trainer, topo, wf = make_trainer()
+        out = run_iters(trainer, 1)
+        if swap:
+            trainer.engine.apply_plan(trainer.plan, topo=topo)
+        out += run_iters(trainer, 3, seed=1)
+        ms[swap] = out
+    assert [sorted(m) for m in ms[False]] == [sorted(m) for m in ms[True]]
+    for m0, m1 in zip(ms[False], ms[True]):
+        for k in m0:
+            assert m0[k] == m1[k], f"metric {k} diverged across the swap"
+
+
+def test_async_staleness_survives_swap():
+    trainer, topo, wf = make_trainer(asynchronous=True)
+    run_iters(trainer, 3)
+    colocated = grouped_plan(topo, wf, (tuple(range(wf.n_tasks)),))
+    info = trainer.engine.apply_plan(colocated, topo=topo)  # carry (default)
+    assert info["dropped_bundles"] == 0.0
+    run_iters(trainer, 3, seed=1)
+    recs = trainer.engine.pipeline.records
+    # fill iteration trains version-0 rollouts; from then on the bundle
+    # being trained is exactly one sync behind — including across the swap
+    assert (recs[0].gen_version, recs[0].weight_version) == (0, 0)
+    for r in recs[1:]:
+        assert r.weight_version - r.gen_version == 1, r
+
+
+def test_drain_refills_pipeline():
+    trainer, topo, wf = make_trainer(asynchronous=True)
+    run_iters(trainer, 3)
+    n_recs = len(trainer.engine.pipeline.records)
+    info = trainer.engine.apply_plan(trainer.plan, topo=topo,
+                                     carry_pending=False)
+    assert info["dropped_bundles"] == 1.0
+    metrics = run_iters(trainer, 2, seed=1)
+    # first post-swap iteration refills the pipeline (nothing to train)
+    assert metrics[0].get("pipeline_fill") == 1.0
+    assert "pipeline_fill" not in metrics[1]
+    assert len(trainer.engine.pipeline.records) == n_recs + 1
+
+
+def test_measured_result_epoch_aware():
+    trainer, topo, wf = make_trainer()
+    run_iters(trainer, 3)
+    # swap onto a severely degraded topology (every link, so the weight
+    # migration is guaranteed slow): the migration window would corrupt a
+    # gen-start delta that straddled the swap
+    all_pairs = [(i, j) for i in range(topo.n) for j in range(i + 1, topo.n)]
+    degraded = topology.degrade_links(topo, bw_factor=1e-6, pairs=all_pairs)
+    colocated = grouped_plan(topo, wf, (tuple(range(wf.n_tasks)),))
+    info = trainer.engine.apply_plan(colocated, topo=degraded)
+    assert info["transition_cost_s"] > 10.0
+    run_iters(trainer, 2, seed=1)
+    meas = trainer.engine.measured_result()
+    # the iteration-time estimate comes from within epoch 1 — it must not
+    # include the (huge) migration window
+    assert meas.iteration_time < info["transition_cost_s"]
+    cmp = trainer.engine.compare_with_simulator()
+    assert cmp["epoch"] == 1.0 and np.isfinite(cmp["ratio"])
+    rows = trainer.engine.epoch_report()
+    assert [r["epoch"] for r in rows] == [0, 1]
+    assert rows[0]["iterations"] == 3 and rows[1]["iterations"] == 2
+    assert all(np.isfinite(r["measured_iter_s"]) for r in rows)
+    assert rows[1]["measured_iter_s"] < info["transition_cost_s"]
+
+
+# ---------------------------------------------------------------------------
+# checkpoint round-trips of live trainer state (satellite)
+# ---------------------------------------------------------------------------
+
+def tree_equal(a, b):
+    fa, ta = jax.tree_util.tree_flatten(a)
+    fb, tb = jax.tree_util.tree_flatten(b)
+    return ta == tb and all(np.array_equal(x, y) for x, y in zip(fa, fb))
+
+
+def test_checkpoint_roundtrip_live_trainer_state(tmp_path):
+    from repro.checkpoint import io as ckpt_io
+    trainer, topo, wf = make_trainer()
+    run_iters(trainer, 2)
+    path = os.path.join(tmp_path, "state.msgpack")
+    saved = trainer.state_tree()
+    assert int(saved["weight_version"]) == 2
+    nbytes = ckpt_io.save(path, saved)
+    assert nbytes > 0
+    run_iters(trainer, 2, seed=1)          # diverge past the checkpoint
+    assert not tree_equal(trainer.state_tree(), saved)
+    restored = ckpt_io.restore(path, trainer.state_tree())
+    trainer.load_state_tree(restored)
+    assert trainer.weight_version == 2
+    assert tree_equal(trainer.state_tree(), saved)
+    # restored state trains on: loss finite, version advances
+    m = run_iters(trainer, 1, seed=2)[0]
+    assert np.isfinite(m["loss"]) and trainer.weight_version == 3
+
+
+# ---------------------------------------------------------------------------
+# reschedule warm start (satellite: incumbent rediscovery)
+# ---------------------------------------------------------------------------
+
+def test_reschedule_unchanged_topology_keeps_incumbent():
+    topo = reference_pool()
+    cfg = tiny_cfg()
+    wf = make_wf(cfg, AdditionTask(max_operand=9), batch=8)
+    sched = HybridScheduler(topo, wf, max_groupings=8,
+                            max_sizes_per_grouping=4)
+    r = sched.search(budget=120)
+    d = redeploy.reschedule(topo, wf, r.plan, budget=150)
+    assert not d.switch
+    assert d.plan is r.plan
+    # warm start re-evaluates the incumbent: never worse on the same topo
+    assert d.new_cost <= d.old_cost + 1e-15
+    assert math.isfinite(d.old_cost)
+
+
+def test_reschedule_dropped_devices_forces_switch():
+    topo = reference_pool()
+    cfg = tiny_cfg()
+    wf = make_wf(cfg, AdditionTask(max_operand=9), batch=8)
+    sched = HybridScheduler(topo, wf, max_groupings=8,
+                            max_sizes_per_grouping=4)
+    r = sched.search(budget=120)
+    small = topology.drop_devices(topo, [topo.n - 2, topo.n - 1])
+    d = redeploy.reschedule(small, wf, r.plan, budget=150)
+    assert d.old_cost == math.inf          # incumbent no longer fits
+    assert d.switch and math.isfinite(d.new_cost)
+    ok, msg = check_constraints(small, wf, d.plan)
+    assert ok, msg
+
+
+# ---------------------------------------------------------------------------
+# elastic controller end to end
+# ---------------------------------------------------------------------------
+
+def test_elastic_controller_swaps_on_drop(tmp_path):
+    trainer, topo, wf = make_trainer()
+    schedule = topology.drift_scenario("drop_tail", topo, at=2)
+    controller = ElasticController(
+        trainer, schedule,
+        ElasticConfig(budget=150, ckpt_dir=str(tmp_path)))
+    wv = []
+    for it in range(6):
+        run_iters(trainer, 1, seed=it)
+        wv.append(trainer.weight_version)
+        rec = controller.poll(it)
+        if rec is not None:
+            assert rec.iteration == 2
+            assert rec.decision.switch and rec.applied
+            assert rec.ckpt_path and os.path.exists(rec.ckpt_path)
+            assert rec.ckpt_bytes > 0
+    assert len(controller.swaps) == 1
+    assert trainer.engine.epoch == 1
+    assert wv == sorted(wv) and wv[-1] == 6   # training never reset
+    # quiet feed after the event: no further reactions
+    assert len(controller.records) == 1
+
+
+def test_elastic_controller_stays_on_mild_drift():
+    # a *searched* incumbent plus a degradation it barely feels: the
+    # warm-started reschedule rediscovers the incumbent and stays put
+    cfg = tiny_cfg()
+    task = AdditionTask(max_operand=9)
+    topo = reference_pool()
+    wf = make_wf(cfg, task, batch=8)
+    sched = HybridScheduler(topo, wf, max_groupings=8,
+                            max_sizes_per_grouping=4)
+    r = sched.search(budget=120)
+    rl = RLConfig(algorithm="grpo", n_rollouts=4, max_new_tokens=4)
+    trainer = RLTrainer(cfg, rl, task, KEY, plan=r.plan, topo=topo, wf=wf)
+    run_iters(trainer, 1)
+    mild = topology.degrade_links(topo, bw_factor=0.5, lat_factor=2.0)
+    controller = ElasticController(
+        trainer, topology.DriftSchedule(topo, [
+            topology.DriftEvent(1, "mild", mild)]),
+        ElasticConfig(budget=120))
+    rec = controller.poll(1)
+    assert rec is not None and not rec.applied
+    assert trainer.engine.epoch == 0
+    # predictions now price the drifted topology even without a swap
+    assert trainer.engine.topo is mild
