@@ -1,9 +1,13 @@
 """Batched serving demo: continuous-batching decode for any assigned
-architecture (smoke scale on CPU), reporting tokens/s and decode-wave
-occupancy — including the sliding-window ring-buffer cache
-(mixtral/gemma2) and recurrent-state decode (rwkv6/jamba).
+architecture (smoke scale on CPU), reporting tokens/s, time-to-first-
+token (p50/p95) and decode-wave occupancy — including the
+sliding-window ring-buffer cache (mixtral/gemma2), recurrent-state
+decode (rwkv6/jamba) and chunked prefill (--prefill-chunk: prompts are
+ingested in bounded chunks riding along with decode rounds, so
+admission never stalls the wave).
 
-    PYTHONPATH=src python examples/serve_batched.py --arch mixtral-8x7b
+    PYTHONPATH=src python examples/serve_batched.py --arch mixtral-8x7b \
+        --prefill-chunk 16
 """
 import argparse
 import sys
@@ -17,6 +21,7 @@ import jax.numpy as jnp
 from repro.configs import archs
 from repro.core.plan import decode_wave
 from repro.genserve import adapter as genserve
+from repro.genserve.adapter import ttft_quantiles
 from repro.models import transformer as T
 from repro.rl.rollout import SamplerConfig
 
@@ -28,6 +33,9 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=48)
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--wave", type=int, default=4)
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked admission tokens per mixed round "
+                         "(0 = one-shot prefill)")
     args = ap.parse_args()
 
     cfg = archs.get(args.arch, smoke=True)
@@ -41,22 +49,32 @@ def main():
                                  cfg.vocab_size, jnp.int32)
     wave = args.wave or decode_wave(args.batch)
     sampler = SamplerConfig(max_new_tokens=args.new_tokens, greedy=True)
-    gen = lambda: genserve.generate(params, cfg, prompts,
-                                    jax.random.PRNGKey(2), sampler,
-                                    wave=wave, decode_chunk=4,
-                                    fast_path=False)
+    gen = lambda **kw: genserve.generate(params, cfg, prompts,
+                                         jax.random.PRNGKey(2), sampler,
+                                         wave=wave, decode_chunk=4,
+                                         prefill_chunk=args.prefill_chunk,
+                                         fast_path=False, **kw)
     gen()  # compile
     t0 = time.time()
-    ro, stats = gen()
+    ro, stats = gen()   # uninstrumented: TTFT stamping syncs admission
     jax.block_until_ready(ro["sequences"])
     dt = time.time() - t0
+    _, ttft_stats = gen(measure_ttft=True)
     windows = sorted({s.window for s in cfg.pattern if s.window})
+    p50, p95 = ttft_quantiles(ttft_stats)
+    admission = (f"chunked C={args.prefill_chunk}" if args.prefill_chunk
+                 else "one-shot")
     print(f"arch={cfg.name} (windows={windows or 'full'}) "
           f"batch={args.batch} wave={stats['wave']} "
-          f"prompt={args.prompt_len} new={args.new_tokens}")
+          f"prompt={args.prompt_len} new={args.new_tokens} "
+          f"admission={admission}")
+    if args.prefill_chunk:
+        occ_label = f"busy occupancy {stats['busy_occupancy']:.2f}"
+    else:
+        occ_label = f"mean occupancy {stats['mean_occupancy']:.2f}"
     print(f"decode throughput: {args.batch * args.new_tokens / dt:.1f} "
-          f"tok/s ({dt:.2f}s; mean occupancy "
-          f"{stats['mean_occupancy']:.2f})")
+          f"tok/s ({dt:.2f}s; {occ_label}; "
+          f"ttft p50={p50 * 1e3:.1f}ms p95={p95 * 1e3:.1f}ms)")
     print("sample:", ro["sequences"][0, args.prompt_len:][:16].tolist())
 
 

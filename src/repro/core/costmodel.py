@@ -21,7 +21,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.plan import (BYTES_BF16, MAX_DECODE_WAVE, Plan, decode_wave)
+from repro.core.plan import (BYTES_BF16, MAX_DECODE_WAVE, PREFILL_CHUNK,
+                             Plan, decode_wave)
 from repro.core.topology import Topology
 from repro.core.workflow import RLWorkflow, Task, TaskKind
 
@@ -238,6 +239,49 @@ class CostModel:
         the bound the genserve engine enforces at execution time."""
         nm, mbs = self._nm_mbs(plan, t, i)
         return decode_wave(nm * mbs)
+
+    def gen_prefill_chunk(self, plan: Plan, t: int, i: int = 0,
+                          j: int = 0, chunk: Optional[int] = None) -> float:
+        """Price of the prefill half of one *mixed wave-step* round for
+        GEN replica i, stage j: a fixed-shape ``[W, C]`` prompt chunk
+        through the stage's layers (chunked admission never stalls the
+        wave, but each round pays this alongside the decode step).
+
+        Compute term: C-token chunk FLOPs for the whole wave — the
+        chunk-local attention from ``flops_per_layer`` plus the C x
+        resident-cache cross-attention at the mean prefill cursor
+        (seq_in / 2).  HBM term: one weight stream per round plus each
+        slot's resident KV (or recurrent-state) read, exactly like the
+        decode half's roofline.  Total prompt ingestion cost of a
+        request is ``ceil(P / C)`` of these rounds, which is what
+        ``plan.predicted_occupancy(prefill_rounds=...)`` charges slots
+        for."""
+        task = self.wf.task(t)
+        if task.kind != TaskKind.GEN:
+            return 0.0
+        C = int(chunk) if chunk else PREFILL_CHUNK
+        dp, pp, tp = plan.parallel[t]
+        nl = plan.stage_layers(self.wf, t, j)
+        dbs = self.gen_decode_wave(plan, t, i)
+        m = task.model
+        fl = flops_per_layer(task, C)
+        cache_len = self.wf.seq_in / 2.0       # mean prefill cursor
+        if m.attention_free:
+            kv_tok, kv_len = 2.0 * _STATE_DIM * m.h1 * BYTES_BF16, 1.0
+        else:
+            fl += 2 * 2 * C * cache_len * m.h1     # cache cross-attention
+            kv_dim = (m.n_kv_heads * m.head_dim
+                      if m.n_kv_heads and m.head_dim else m.h1)
+            kv_tok, kv_len = 2.0 * kv_dim * BYTES_BF16, cache_len
+        worst = 0.0
+        for k in range(tp):
+            d = int(plan.assignment[t][i, j, k])
+            comp = dbs * nl * fl / (self.topo.comp(d) * tp)
+            weights = BYTES_BF16 * nl * m.layer_active_count \
+                / (self.topo.hbm(d) * tp)
+            kv = dbs * nl * kv_tok * kv_len / (self.topo.hbm(d) * tp)
+            worst = max(worst, comp + weights + kv)
+        return worst
 
     def gen_wave_occupancy(self, plan: Plan, t: int) -> float:
         """Predicted mean decode-slot occupancy for GEN task t,

@@ -28,15 +28,30 @@ INFER_BYTES_PER_PARAM = 2
 # generation engines (vLLM-style continuous batching) decode in waves of at
 # most this many sequences per replica; bounds KV working memory and C_hbm.
 MAX_DECODE_WAVE = 32
+# default prompt tokens ingested per mixed wave-step round under chunked
+# admission (genserve prefill_chunk); bounds how long admission of a long
+# prompt can delay the decode half of a round.
+PREFILL_CHUNK = 16
 
 
 def decode_wave(local_batch: float) -> int:
     return max(min(int(local_batch), MAX_DECODE_WAVE), 1)
 
 
+def prefill_rounds(prompt_len: int, prefill_chunk: int) -> int:
+    """Mixed wave-step rounds a request's prompt ingestion occupies a
+    decode slot for under chunked admission (0 = one-shot admission,
+    which the occupancy model prices as free)."""
+    if prefill_chunk <= 0:
+        return 0
+    return math.ceil(max(int(prompt_len), 1) / int(prefill_chunk))
+
+
 def predicted_occupancy(n_requests: float,
                         wave: Optional[int] = None,
-                        gen_lens: Optional[Sequence[int]] = None) -> float:
+                        gen_lens: Optional[Sequence[int]] = None,
+                        prefill_rounds: float = 0.0,
+                        max_new_tokens: Optional[int] = None) -> float:
     """Predicted mean decode-slot occupancy under continuous batching.
 
     This is the occupancy the cost model's ``C_hbm`` wave term assumes
@@ -47,15 +62,42 @@ def predicted_occupancy(n_requests: float,
     partial one: occupancy = n / ceil(n / W).  Given per-request lengths,
     ideal continuous batching is bounded by the longest request and by
     total work: steps >= max(max_len, ceil(sum_len / W)), and occupancy
-    is total tokens over that lower bound."""
+    is total tokens over that lower bound.
+
+    ``prefill_rounds`` > 0 prices *chunked admission* instead of
+    assuming prompt ingestion free: each request additionally occupies a
+    slot for that many mixed wave-step rounds before its first token
+    (see :func:`prefill_rounds`), the work bound grows accordingly, and
+    the returned figure is the *busy* occupancy (slots doing a decode
+    step or a prefill chunk per round) — comparable against the slot
+    table's ``busy_occupancy()``.  A scalar applies to every request;
+    a sequence gives per-request rounds (aligned with ``gen_lens`` —
+    required for the chain bound to stay a true upper bound under
+    heterogeneous prompt lengths).  Uniform lengths then need
+    ``max_new_tokens`` (the per-request decode length)."""
     W = wave if wave is not None else MAX_DECODE_WAVE
     W = max(int(W), 1)
     n = max(float(n_requests), 1.0)
-    if gen_lens is None:
+    scalar_c = not hasattr(prefill_rounds, "__len__")
+    if scalar_c and max(float(prefill_rounds), 0.0) == 0.0 \
+            and gen_lens is None:
         return n / math.ceil(n / W)
-    lens = [max(int(l), 1) for l in gen_lens]
-    total = sum(lens)
-    steps = max(max(lens), math.ceil(total / W))
+    if gen_lens is None:
+        assert max_new_tokens is not None, \
+            "uniform-length occupancy with prefill rounds needs " \
+            "max_new_tokens"
+        lens = [max(int(max_new_tokens), 1)] * int(n)
+    else:
+        lens = [max(int(l), 1) for l in gen_lens]
+    if scalar_c:
+        cs = [max(float(prefill_rounds), 0.0)] * len(lens)
+    else:
+        cs = [max(float(c), 0.0) for c in prefill_rounds]
+        assert len(cs) == len(lens), \
+            "per-request prefill_rounds must align with gen_lens"
+    total = sum(lens) + sum(cs)
+    chain = max(l + c for l, c in zip(lens, cs))
+    steps = max(chain, math.ceil(total / W))
     return total / steps
 
 

@@ -322,20 +322,33 @@ class Engine:
         stats = bb.pop("gen_stats", None)
         if stats is None:
             return
-        self._wave_slot_steps += int(stats["slot_steps"])
+        # busy accounting: decode slot-steps plus prefill-chunk slot-
+        # rounds (chunked admission) over all device rounds — for the
+        # one-shot admission path prefill_slot_steps is 0 and this
+        # reduces to the pure decode occupancy
+        self._wave_slot_steps += int(stats["slot_steps"]) \
+            + int(stats.get("prefill_slot_steps", 0))
         self._wave_decode_steps += int(stats["decode_steps"])
         # ideal occupancy for the batch this executor actually ran (the
         # engine folds all plan replicas onto the host, so the per-call
         # request count — not the cost model's per-replica batch — is the
-        # like-for-like prediction baseline)
-        self._wave_pred_sum += predicted_occupancy(stats["admitted"],
-                                                   wave=stats["wave"])
+        # like-for-like prediction baseline); chunked admission charges
+        # each request its prefill rounds instead of free admission
+        self._wave_pred_sum += predicted_occupancy(
+            stats["admitted"], wave=stats["wave"],
+            prefill_rounds=stats.get("prefill_rounds_per_req", 0.0),
+            max_new_tokens=stats.get("max_new_tokens"))
         self._wave_calls += 1
         bb["metrics"].update({
             "gen_wave": float(stats["wave"]),
             "gen_wave_occupancy": float(stats["mean_occupancy"]),
             "gen_decode_steps": float(stats["decode_steps"]),
         })
+        if stats.get("prefill_rounds", 0):
+            bb["metrics"]["gen_prefill_rounds"] = \
+                float(stats["prefill_rounds"])
+            bb["metrics"]["gen_busy_occupancy"] = \
+                float(stats["busy_occupancy"])
         rounds = stats.get("rounds") or []
         if not rounds and stats["decode_steps"]:
             # single-wave fast path: one synthesized zero-length wave
@@ -351,8 +364,11 @@ class Engine:
                 wave=w, occupancy=occ, epoch=self.ctx.epoch))
 
     def wave_occupancy_summary(self) -> Dict[str, float]:
-        """Measured mean decode-slot occupancy (over all iterations) vs
-        the ideal occupancy for the batches the engine actually ran.
+        """Measured mean *busy* slot occupancy (over all iterations) vs
+        the ideal occupancy for the batches the engine actually ran —
+        under chunked admission both sides count prefill-chunk rounds
+        (a slot mid-prefill is busy, and admission is priced, not free;
+        with one-shot admission both reduce to pure decode occupancy).
 
         ``predicted_occupancy`` is the engine-view ideal (whole rollout
         batch, since the engine folds every plan replica onto the host);

@@ -67,6 +67,7 @@ def run_generation(st, bb, placement):
             ro, stats = genserve.generate(
                 st.gen_params, st.cfg, prompts, bb["rng"], st.sampler,
                 wave=wave, decode_chunk=getattr(st.rl, "decode_chunk", 1),
+                prefill_chunk=getattr(st.rl, "prefill_chunk", 0),
                 fast_path=False)
         else:
             ro = st._generate(st.gen_params, prompts=prompts,

@@ -12,9 +12,9 @@ the same machine.
 Slot lifecycle::
 
         queue (FIFO | SJF)                    wave of W slots
-     ┌──────────────┐   admit (prefill      ┌────┬────┬────┬────┐
+     ┌──────────────┐   admit (one-shot     ┌────┬────┬────┬────┐
      │ r7 r6 r5 r4  │ ─────────────────────▶│ r0 │ r1 │ r2 │ r3 │
-     └──────────────┘   inject + scatter)   └─┬──┴─┬──┴─┬──┴─┬──┘
+     └──────────────┘   or chunked install) └─┬──┴─┬──┴─┬──┴─┬──┘
                                               │    │    │    │  decode step
             ▲                                 ▼    ▼    ▼    ▼  (batched,
             │                               tok  tok  EOS  tok   per-slot pos)
@@ -23,6 +23,25 @@ Slot lifecycle::
             └─────────── freed slot back-filled ──── outputs[r2] complete
 
     FREE ──admit──▶ ACTIVE ──emits tokens──▶ RETIRED(EOS | budget) ──▶ FREE
+    FREE ──install─▶ PREFILLING ──chunks──▶ lands (first token) ─▶ ACTIVE
+
+Device-program table (every round is one of these fixed-shape jitted
+programs; details in ``genserve.decoder``):
+
+  program  | inputs                      | static-shape rule
+  -------- | --------------------------- | -------------------------------
+  admit    | [W,P] prompts, masks, key   | one-shot whole-prompt prefill
+  install  | [W,P] prompts, masks, plens | chunked: metadata only, no
+           |                             |   compute, zeroed cache rows
+  mixed    | [k] decode keys, [k] land   | scan of k sub-rounds (k <=
+           |   keys                      |   decode_chunk): each one
+           |                             |   decode step + one [W,
+           |                             |   prefill_chunk] prompt
+           |                             |   chunk, all masked
+  chunk    | [decode_chunk] keys         | pure decode steps under scan
+
+Membership, prompt raggedness, chunk counts and landings are masks and
+scatters — the host never recompiles on admission order or prompt mix.
 
 Invariants:
   * shapes are static — membership is masks/scatters, never recompiles;
@@ -31,14 +50,19 @@ Invariants:
     one natively batched ``transformer.decode_step`` with per-slot
     positions — the Sq == 1 flash-decode kernel path under the pallas
     impl; a vmap of the B=1 decode remains as the parity reference);
-  * admission replaces a slot's cache rows wholesale
-    (``models.cache.scatter_slots``) — no stale state can leak;
+  * one-shot admission replaces a slot's cache rows wholesale
+    (``models.cache.scatter_slots``); chunked admission zeroes them and
+    rebuilds via per-slot-cursor chunk writes
+    (``transformer.prefill_chunk_step``) — no stale state can leak
+    either way, and a sequence of chunk steps is numerically the
+    one-shot prefill (pinned by the random-trace parity tests);
   * EOS/validity semantics are shared with the single-wave reference
     path through ``models.sampling`` (first EOS valid, everything after
     masked, prompt-ends-with-EOS starts dead);
   * when ``batch <= wave`` the engine's rng schedule equals
-    ``rl.rollout.generate``'s, so the reference path is reproduced
-    token-for-token (pinned by tests/test_genserve.py).
+    ``rl.rollout.generate``'s on both admission paths, so the reference
+    path is reproduced token-for-token (pinned by
+    tests/test_genserve.py).
 """
 from repro.genserve.adapter import generate, wave_stats_from_mask  # noqa: F401
 from repro.genserve.decoder import GenServeConfig, serve  # noqa: F401

@@ -26,6 +26,16 @@ from repro.models.config import ModelConfig
 from repro.rl import rollout
 
 
+def ttft_quantiles(stats) -> Tuple[float, float]:
+    """(p50, p95) seconds over per-request time-to-first-token; (0, 0)
+    when the engine path did not record TTFT (single-wave fast path, or
+    ``measure_ttft`` off)."""
+    ts = sorted(stats.get("ttft", {}).values())
+    if not ts:
+        return 0.0, 0.0
+    return (float(np.percentile(ts, 50)), float(np.percentile(ts, 95)))
+
+
 def wave_stats_from_mask(mask, wave: Optional[int] = None
                          ) -> Dict[str, object]:
     """Synthesize single-wave engine stats from a validity mask [B, N].
@@ -36,11 +46,17 @@ def wave_stats_from_mask(mask, wave: Optional[int] = None
     m = np.asarray(mask)
     B, N = m.shape
     trace = m.sum(axis=0)
+    occ = float(m.sum() / max(N, 1))
     return {"engine": "single-wave", "wave": wave or B,
             "decode_steps": int(N),
             "slot_steps": int(m.sum()),
-            "mean_occupancy": float(m.sum() / max(N, 1)),
+            "mean_occupancy": occ,
+            "busy_occupancy": occ,
             "occupancy_trace": [int(c) for c in trace],
+            "prefill_trace": [], "prefill_rounds": 0,
+            "prefill_slot_steps": 0, "prefill_chunk": 0,
+            "prefill_rounds_per_req": 0.0,
+            "max_new_tokens": int(N), "ttft": {},
             "rounds": [], "prefills": 1, "admitted": B, "retired": B}
 
 
@@ -49,20 +65,25 @@ def generate(params, cfg: ModelConfig, prompts, rng,
              wave: Optional[int] = None, decode_chunk: int = 1,
              gen_lens: Optional[Sequence[int]] = None,
              fast_path: bool = True, decode_path: str = "batched",
-             admission: str = "fifo"
+             admission: str = "fifo", prefill_chunk: int = 0,
+             prompt_lens: Optional[Sequence[int]] = None,
+             measure_ttft: bool = False
              ) -> Tuple[Dict[str, jnp.ndarray], Dict[str, object]]:
     """Continuous-batching generation with the rollout contract.
 
     `wave` defaults to ``core.plan.decode_wave(B)``; batches no larger
     than the wave take the single-wave reference path unless
-    ``fast_path=False`` (tests) or per-request budgets force the engine.
-    ``decode_path`` / ``admission`` select the wave-decode execution path
-    (batched fast path vs the vmapped per-slot reference) and the queue
-    policy (FIFO vs shortest-job-first when budgets are known).
+    ``fast_path=False`` (tests), per-request budgets, or chunked
+    admission force the engine.  ``decode_path`` / ``admission`` select
+    the wave-decode execution path (batched fast path vs the vmapped
+    per-slot reference) and the queue policy (FIFO vs shortest-job-first
+    when budgets are known).  ``prefill_chunk > 0`` enables chunked
+    admission (mixed wave-steps: prompts ingested ``prefill_chunk``
+    tokens per round alongside decode, optional ragged ``prompt_lens``).
     """
     B = int(np.asarray(prompts).shape[0])
     W = int(wave) if wave else plan_mod.decode_wave(B)
-    if fast_path and gen_lens is None and B <= W:
+    if fast_path and gen_lens is None and prefill_chunk == 0 and B <= W:
         ro = rollout.generate(params, cfg, jnp.asarray(prompts), rng,
                               sampler)
         return ro, wave_stats_from_mask(ro["mask"], wave=min(W, B))
@@ -70,5 +91,8 @@ def generate(params, cfg: ModelConfig, prompts, rng,
                           decode_chunk=decode_chunk,
                           temperature=sampler.temperature,
                           eos_token=sampler.eos_token, greedy=sampler.greedy,
-                          decode_path=decode_path, admission=admission)
-    return serve(params, cfg, prompts, rng, gcfg, gen_lens=gen_lens)
+                          decode_path=decode_path, admission=admission,
+                          prefill_chunk=prefill_chunk,
+                          measure_ttft=measure_ttft)
+    return serve(params, cfg, prompts, rng, gcfg, gen_lens=gen_lens,
+                 prompt_lens=prompt_lens)

@@ -1,35 +1,75 @@
-"""Wave-stepped continuous-batching decode loop.
+"""Wave-stepped continuous-batching decode loop with chunked prefill.
 
-Device-side execution is two jitted, fixed-shape programs per
-(model, engine-config, prompt-shape) triple:
+Device-side execution is a small set of jitted, fixed-shape programs per
+(model, engine-config, prompt-shape) triple — the device-program table:
 
-  * ``admit``  — prefill a [W, P] prompt batch, sample each admitted
-    request's first token, and scatter the fresh per-slot cache rows into
-    the wave cache (``models.cache.scatter_slots`` — whole-row
-    replacement, so recycled slots cannot see stale state);
-  * ``chunk``  — ``decode_chunk`` wave decode steps under ``lax.scan``:
-    each step runs one *batched* single-token ``decode_step`` over the
-    whole wave with per-slot cache positions (every slot keeps its own
-    RoPE phase, ring-buffer window and recurrent state, so recycled
-    slots stay exact while sharing a single fused attention call —
-    the flash-decode Pallas kernel when the pallas impl is active),
-    samples the next token for the whole wave, records it into the
-    per-request output buffers, and retires slots that emitted EOS or
-    hit their budget.  ``decode_path="vmapped"`` selects the legacy
-    W-way vmap of a B=1 decode for parity testing.
+  program   inputs (beyond params/state)      what it does
+  -------   -------------------------------   ---------------------------
+  admit     prompts [W,P], admit_mask [W],    one-shot path
+            rows [W], limits [W], key         (``prefill_chunk == 0``):
+                                              prefill the whole [W, P]
+                                              prompt batch, sample each
+                                              admitted request's first
+                                              token, scatter fresh cache
+                                              rows (``scatter_slots``).
+  install   prompts [W,P], admit_mask [W],    chunked path: stage request
+            rows [W], limits [W], plens [W]   metadata + prompt rows into
+                                              per-slot buffers, zero the
+                                              admitted slots' cache rows
+                                              (``cache.zero_slots``), set
+                                              ``prefill_cursor = 0``.  No
+                                              model compute, no sampling.
+  mixed     k_decodes [k], k_lands [k]        the **mixed wave-step**: a
+                                              scan of k sub-rounds (k <=
+                                              ``decode_chunk``, sized by
+                                              the host to the pending
+                                              prefill work), each ONE
+                                              batched ``decode_step``
+                                              over decoding slots (cache
+                                              rows of admitting slots
+                                              protected) plus ONE
+                                              ``prefill_chunk_step`` (up
+                                              to ``prefill_chunk`` prompt
+                                              tokens) over admitting
+                                              slots, all masked; a slot
+                                              whose final chunk lands
+                                              samples its first token
+                                              (its sub-round's k_lands
+                                              entry) and decodes from the
+                                              next sub-round on.
+  chunk     keys [decode_chunk]               ``decode_chunk`` wave steps
+                                              under ``lax.scan`` (used
+                                              when no slot is mid-
+                                              prefill): batched decode,
+                                              sample, record, retire on
+                                              EOS / budget.
+
+Static-shape rules: every program's operand shapes depend only on
+(W, P, C, N, n_reqs) plus, for ``mixed``, the scan length k — a value
+in {1..decode_chunk}, so at most ``decode_chunk`` program variants
+exist, each traced once on first use (decode_chunk=1, the default,
+means a single variant).  Membership, prompt raggedness, chunk counts
+and landings are masks and scatters — none of them retrace; the
+bounded k variants trade a one-time compile each for never running
+masked all-idle chunk passes every round.
+``decode_path="vmapped"`` selects the legacy W-way vmap of a B=1 decode
+for parity testing.
 
 The host loop owns dynamic membership: it reads back the ``occupied``
-vector after every chunk, retires finished requests via the
-``scheduler.SlotTable``, and back-fills freed slots from the admission
+vector after every round, retires finished requests via the
+``scheduler.SlotTable``, back-fills freed slots from the admission
 queue (FIFO by default; ``admission="sjf"`` admits shortest known
-budgets first) with another ``admit`` call.  All shapes stay static —
-membership changes are masks and scatters, never recompilation.
+budgets first), and mirrors each slot's prefill cursor (deterministic:
+every mixed round advances every prefilling slot by one chunk) so it
+knows landings without a device sync.
 
 RNG schedule: the first ``max_new_tokens`` sampling events use
 ``jax.random.split(rng, max_new_tokens)`` — the exact schedule of
 ``rl.rollout.generate`` — so a batch that fits into a single wave
-reproduces the reference path token-for-token.  Late admissions and
-overflow steps draw from a ``fold_in``-derived side stream.
+reproduces the reference path token-for-token *on both admission
+paths*: chunked prefill consumes no keys until the landing round, whose
+first-token sample uses ``rngs[0]`` exactly like the one-shot admit.
+Late admissions and overflow steps draw from ``fold_in`` side streams.
 """
 from __future__ import annotations
 
@@ -62,12 +102,20 @@ class GenServeConfig:
     greedy: bool = False
     decode_path: str = "batched"     # "batched" | "vmapped" wave decode
     admission: str = "fifo"          # "fifo" | "sjf" queue policy
+    prefill_chunk: int = 0           # tokens per mixed-round prefill chunk
+    #                                  (0 = one-shot whole-prompt admit)
+    measure_ttft: bool = False       # stamp per-request time-to-first-token
+    #                                  (one-shot admission pays a device sync
+    #                                  per admit batch; chunked stamps ride
+    #                                  the round sync for free, but are
+    #                                  gated too so the flag means one thing)
 
     def validate(self) -> None:
         assert self.wave >= 1 and self.max_new_tokens >= 1
         assert self.decode_chunk >= 1
         assert self.decode_path in ("batched", "vmapped")
         assert self.admission in ("fifo", "sjf")
+        assert self.prefill_chunk >= 0
 
 
 # ---------------------------------------------------------------------------
@@ -156,35 +204,129 @@ def _build_fns(cfg: ModelConfig, gcfg: GenServeConfig, prompt_len: int,
     wave_decode = (_wave_decode_batched if gcfg.decode_path == "batched"
                    else _wave_decode_vmapped)
 
+    def decode_substep(params, st, key, protect: bool):
+        """One batched wave decode step.  With ``protect`` the cache
+        writes (KV + recurrent state) of non-emitting rows are merged
+        back — required whenever slots may be mid-prefill (the mixed
+        wave-step), free to skip on the pure decode path (a free row's
+        clobbered cache is replaced wholesale at one-shot re-admission,
+        or zeroed + rewritten by chunked re-admission)."""
+        logits, new_blocks = wave_decode(params, cfg, st["tok"],
+                                         st["pos"], st["cache"])
+        nxt = sample(key, logits)
+        lp = sampling.token_logprobs(logits, nxt)
+        emit = st["occupied"]
+        buf_rows = jnp.where(emit, st["req"], dummy_row)
+        cols = jnp.where(emit, st["ngen"], 0)
+        alive_after = sampling.next_alive(emit, nxt, eos)
+        finished = emit & (~alive_after |
+                           (st["ngen"] + 1 >= st["limit"]))
+        st = dict(st)
+        st["gen"] = st["gen"].at[buf_rows, cols].set(nxt)
+        st["lp"] = st["lp"].at[buf_rows, cols].set(lp)
+        st["mask"] = st["mask"].at[buf_rows, cols].set(
+            emit.astype(jnp.float32))
+        st["cache"] = cache_mod.scatter_slots(st["cache"], new_blocks,
+                                              emit) if protect \
+            else new_blocks
+        st["pos"] = jnp.where(emit, st["pos"] + 1, st["pos"])
+        st["tok"] = jnp.where(emit, nxt, st["tok"])
+        st["ngen"] = jnp.where(emit, st["ngen"] + 1, st["ngen"])
+        st["occupied"] = emit & ~finished
+        return st, jnp.sum(emit.astype(jnp.int32))
+
     def chunk(params, state, keys):
         """`decode_chunk` wave steps; returns per-step active counts."""
+        return jax.lax.scan(
+            lambda st, key: decode_substep(params, st, key, protect=False),
+            state, keys)
 
-        def step(st, key):
-            logits, new_blocks = wave_decode(params, cfg, st["tok"],
-                                             st["pos"], st["cache"])
-            nxt = sample(key, logits)
-            lp = sampling.token_logprobs(logits, nxt)
-            emit = st["occupied"]
-            buf_rows = jnp.where(emit, st["req"], dummy_row)
-            cols = jnp.where(emit, st["ngen"], 0)
-            alive_after = sampling.next_alive(emit, nxt, eos)
-            finished = emit & (~alive_after |
-                               (st["ngen"] + 1 >= st["limit"]))
-            st = dict(st)
-            st["gen"] = st["gen"].at[buf_rows, cols].set(nxt)
-            st["lp"] = st["lp"].at[buf_rows, cols].set(lp)
-            st["mask"] = st["mask"].at[buf_rows, cols].set(
-                emit.astype(jnp.float32))
-            st["cache"] = new_blocks
-            st["pos"] = jnp.where(emit, st["pos"] + 1, st["pos"])
-            st["tok"] = jnp.where(emit, nxt, st["tok"])
-            st["ngen"] = jnp.where(emit, st["ngen"] + 1, st["ngen"])
-            st["occupied"] = emit & ~finished
-            return st, jnp.sum(emit.astype(jnp.int32))
+    def install(state, prompts, admit_mask, rows, limits, plens):
+        """Chunked admission: stage request metadata into the admitted
+        slots and zero their cache rows — no model compute; the prompt
+        is ingested chunk by chunk by subsequent ``mixed`` rounds."""
+        st = dict(state)
+        st["prompt"] = jnp.where(admit_mask[:, None], prompts,
+                                 state["prompt"])
+        st["pcur"] = jnp.where(admit_mask, 0, state["pcur"])
+        st["plen"] = jnp.where(admit_mask, plens, state["plen"])
+        st["prefilling"] = state["prefilling"] | admit_mask
+        st["req"] = jnp.where(admit_mask, rows, state["req"])
+        st["limit"] = jnp.where(admit_mask, limits, state["limit"])
+        st["ngen"] = jnp.where(admit_mask, 0, state["ngen"])
+        st["occupied"] = state["occupied"] & ~admit_mask
+        st["cache"] = cache_mod.zero_slots(state["cache"], admit_mask)
+        return st
 
-        return jax.lax.scan(step, state, keys)
+    C = max(gcfg.prefill_chunk, 1)
 
-    return jax.jit(admit), jax.jit(chunk)
+    def prefill_substep(params, st, k_land):
+        """The prefill half of one mixed sub-round: one [W, C] prompt
+        chunk over the admitting slots (masked), landing any slot whose
+        final chunk just arrived (first token sampled from k_land)."""
+        st = dict(st)
+        pf = st["prefilling"]
+        pcur = st["pcur"]
+        n_valid = jnp.where(pf, jnp.clip(st["plen"] - pcur, 0, C), 0)
+        idx = jnp.clip(pcur[:, None] + jnp.arange(C), 0,
+                       st["prompt"].shape[1] - 1)
+        chunk_tok = jnp.take_along_axis(st["prompt"], idx, axis=1)
+        last_logits, pf_cache = T.prefill_chunk_step(
+            params, cfg, chunk_tok, {"blocks": st["cache"], "pos": pcur},
+            n_valid=n_valid)
+        prow = n_valid > 0
+        cache_p = cache_mod.scatter_slots(st["cache"], pf_cache["blocks"],
+                                          prow)
+
+        land = pf & (pcur + n_valid >= st["plen"])
+        tok0 = sample(k_land, last_logits)
+        lp0 = sampling.token_logprobs(last_logits, tok0)
+        last_prompt_tok = jnp.take_along_axis(
+            st["prompt"], jnp.clip(st["plen"] - 1, 0, None)[:, None],
+            axis=1)[:, 0]
+        alive0 = land if eos is None else land & (last_prompt_tok != eos)
+        finished0 = st["limit"] <= 1
+        if eos is not None:
+            finished0 = finished0 | (tok0 == eos)
+        buf0 = jnp.where(land, st["req"], dummy_row)
+        st["gen"] = st["gen"].at[buf0, 0].set(tok0)
+        st["lp"] = st["lp"].at[buf0, 0].set(lp0)
+        st["mask"] = st["mask"].at[buf0, 0].set(alive0.astype(jnp.float32))
+        st["cache"] = cache_p
+        st["pcur"] = jnp.where(pf, pcur + n_valid, pcur)
+        st["prefilling"] = pf & ~land
+        st["pos"] = jnp.where(land, st["plen"], st["pos"])
+        st["tok"] = jnp.where(land, tok0, st["tok"])
+        st["ngen"] = jnp.where(land, 1, st["ngen"])
+        st["occupied"] = jnp.where(land, alive0 & ~finished0,
+                                   st["occupied"])
+        return st, jnp.sum(prow.astype(jnp.int32))
+
+    def mixed(params, state, k_decodes, k_lands):
+        """The mixed wave-step: a scan of sub-rounds, each ONE batched
+        decode step over decoding slots (cache rows of admitting slots
+        protected) plus ONE [W, C] prefill chunk over admitting slots —
+        one fixed-shape program per round, so admission of a long prompt
+        never stalls the decode wave.  A slot landing at sub-round j
+        decodes from sub-round j+1 onward *within the same program*.
+        The host sizes the scan (len(k_decodes) sub-rounds, bounded by
+        ``decode_chunk``) to the outstanding prefill work so no
+        all-masked chunk passes run — each distinct scan length is its
+        own jit variant, compiled once (at most ``decode_chunk`` of
+        them).  Returns (state, (per-sub-round decode counts,
+        per-sub-round prefill counts))."""
+
+        def sub(st, keys2):
+            k_d, k_l = keys2
+            st, d = decode_substep(params, st, k_d, protect=True)
+            st, p = prefill_substep(params, st, k_l)
+            return st, (d, p)
+
+        st, (d_counts, p_counts) = jax.lax.scan(
+            sub, dict(state), (k_decodes, k_lands))
+        return st, (d_counts, p_counts)
+
+    return jax.jit(admit), jax.jit(chunk), jax.jit(install), jax.jit(mixed)
 
 
 def _init_state(cfg: ModelConfig, gcfg: GenServeConfig, prompt_len: int,
@@ -192,7 +334,7 @@ def _init_state(cfg: ModelConfig, gcfg: GenServeConfig, prompt_len: int,
     W, N = gcfg.wave, gcfg.max_new_tokens
     cache = cache_mod.init_cache(cfg, W, prompt_len + N,
                                  dtype=jnp.dtype(cfg.dtype))
-    return {
+    st = {
         "tok": jnp.zeros((W,), jnp.int32),
         "pos": jnp.zeros((W,), jnp.int32),
         "occupied": jnp.zeros((W,), bool),
@@ -204,6 +346,18 @@ def _init_state(cfg: ModelConfig, gcfg: GenServeConfig, prompt_len: int,
         "lp": jnp.zeros((n_reqs + 1, N), jnp.float32),
         "mask": jnp.zeros((n_reqs + 1, N), jnp.float32),
     }
+    if gcfg.prefill_chunk > 0:
+        # chunked-prefill slot state: per-slot prompt buffer, prefill
+        # cursor, prompt length and mid-prefill flag (only present when
+        # chunked admission is on — the one-shot path's per-round calls
+        # should not carry dead operands)
+        st.update({
+            "prompt": jnp.zeros((W, prompt_len), jnp.int32),
+            "pcur": jnp.zeros((W,), jnp.int32),
+            "plen": jnp.full((W,), prompt_len, jnp.int32),
+            "prefilling": jnp.zeros((W,), bool),
+        })
+    return st
 
 
 # ---------------------------------------------------------------------------
@@ -211,46 +365,72 @@ def _init_state(cfg: ModelConfig, gcfg: GenServeConfig, prompt_len: int,
 # ---------------------------------------------------------------------------
 
 def serve(params, cfg: ModelConfig, prompts, rng, gcfg: GenServeConfig,
-          gen_lens: Optional[Sequence[int]] = None
+          gen_lens: Optional[Sequence[int]] = None,
+          prompt_lens: Optional[Sequence[int]] = None
           ) -> Tuple[Dict[str, jnp.ndarray], Dict[str, object]]:
     """Generate for all `prompts` [B, P] with continuous batching.
 
     Returns (rollout dict — the exact `rl.rollout.generate` contract —
-    and an engine-stats dict with the per-round wave timeline and
-    occupancy trace).  `gen_lens` optionally caps each request's budget
-    (used by benchmarks to impose output-length distributions)."""
+    and an engine-stats dict with the per-round wave timeline, occupancy
+    trace and per-request time-to-first-token).  `gen_lens` optionally
+    caps each request's budget (used by benchmarks to impose
+    output-length distributions).  `prompt_lens` marks each request's
+    real prompt length inside the padded [B, P] array: the chunked
+    admission path (``gcfg.prefill_chunk > 0``) ingests only the real
+    tokens and lands each slot at its own length; the one-shot path
+    prefills the padded width (padding-as-content — the reference
+    semantics), so cross-path parity holds only for uniform lengths."""
     gcfg.validate()
     prompts_np = np.asarray(prompts, np.int32)
     B, P = prompts_np.shape
     N, W = gcfg.max_new_tokens, gcfg.wave
     K = min(gcfg.decode_chunk, N)
+    C = gcfg.prefill_chunk
+    chunked = C > 0
+    if chunked and prompt_lens is not None:
+        plens_np = np.clip(np.asarray(prompt_lens, np.int64), 1, P)
+    else:
+        plens_np = np.full((B,), P, np.int64)
+    nchunks = int(np.ceil(P / C)) if chunked else 0
 
     limits = np.full((B,), N, np.int64) if gen_lens is None \
         else np.clip(np.asarray(gen_lens, np.int64), 1, N)
     queue = RequestQueue([Request(i, int(limits[i])) for i in range(B)],
                          policy=gcfg.admission)
     table = SlotTable(W)
-    admit_fn, chunk_fn = _build_fns(cfg, gcfg, P, B,
-                                    attn_mod.get_attention_impl())
-    state = _init_state(cfg, gcfg, P, B)
+    # measure_ttft is host-only — strip it from the program cache key so
+    # flipping instrumentation never recompiles the device programs
+    fns_cfg = dataclasses.replace(gcfg, measure_ttft=False)
+    admit_fn, chunk_fn, install_fn, mixed_fn = _build_fns(
+        cfg, fns_cfg, P, B, attn_mod.get_attention_impl())
+    state = _init_state(cfg, fns_cfg, P, B)
 
     # rngs[t] drives the t-th sampling event, mirroring rollout.generate:
-    # the first admission consumes rngs[0], decode step t consumes rngs[t].
+    # the first admission consumes rngs[0] (at its landing round when
+    # chunked), decode step t consumes rngs[t].
     rngs = jax.random.split(rng, N)
     side = jax.random.fold_in(rng, 0x5EED)
     side_admit = jax.random.fold_in(side, 0)    # late-admission sampling
     side_step = jax.random.fold_in(side, 1)     # decode steps beyond rngs
     next_key = 0
     rounds: List[Tuple[float, float, float, int]] = []
+    ttft: Dict[int, float] = {}
     n_prefills = 0
     round_idx = 0
     occupied = np.zeros((W,), bool)      # device occupancy, host view
+    # host mirror of each slot's remaining prefill chunks — every mixed
+    # round advances every prefilling slot by exactly one chunk, so
+    # landings are known without a device sync
+    prefill_left = np.zeros((W,), np.int64)
+    t_start = time.monotonic()
     while len(queue) or table.active:
         round_idx += 1
-        assert round_idx <= 2 * B * (N + 1), "genserve loop did not converge"
+        assert round_idx <= 2 * B * (N + 1) + B * (nchunks + 1), \
+            "genserve loop did not converge"
         t0 = time.monotonic()
         admitted = 0
         may_live = False
+        reqs: List[Request] = []
         free = table.free_slots()
         if free and len(queue):
             reqs = queue.pop(len(free))
@@ -260,30 +440,98 @@ def serve(params, cfg: ModelConfig, prompts, rng, gcfg: GenServeConfig,
             admit_mask = np.zeros((W,), bool)
             rows = np.full((W,), B, np.int32)
             lim = np.ones((W,), np.int32)
+            pl = np.full((W,), P, np.int32)
             for s, rq in zip(slots, reqs):
                 pb[s] = prompts_np[rq.rid]
                 admit_mask[s] = True
                 rows[s] = rq.rid
                 lim[s] = rq.max_new_tokens
-            key = rngs[0] if next_key == 0 \
-                else jax.random.fold_in(side_admit, round_idx)
-            state = admit_fn(params, state, pb, admit_mask, rows, lim, key)
+                pl[s] = plens_np[rq.rid]
+            if chunked:
+                state = install_fn(state, pb, admit_mask, rows, lim, pl)
+                for s, rq in zip(slots, reqs):
+                    prefill_left[s] = -(-int(plens_np[rq.rid]) // C)
+            else:
+                key = rngs[0] if next_key == 0 \
+                    else jax.random.fold_in(side_admit, round_idx)
+                state = admit_fn(params, state, pb, admit_mask, rows, lim,
+                                 key)
+                next_key = max(next_key, 1)
+                if gcfg.measure_ttft:
+                    # first tokens exist once the admit program completes
+                    # — stamp TTFT on the sampled-token leaf (this sync
+                    # serializes admission against the decode chunk, so
+                    # it is opt-in)
+                    jax.block_until_ready(state["tok"])
+                    now = time.monotonic()
+                    for rq in reqs:
+                        ttft[rq.rid] = now - t_start
+                # host-side liveness bound — a synced read of `occupied`
+                # here would serialize admission against the decode
+                # chunk; this is conservative only for first-token EOS
+                # (one chunk of bounded waste in that rare case)
+                may_live = any(
+                    rq.max_new_tokens > 1
+                    and (gcfg.eos_token is None
+                         or prompts_np[rq.rid, -1] != gcfg.eos_token)
+                    for rq in reqs)
             table.admit(slots, reqs)
-            next_key = max(next_key, 1)
             n_prefills += 1
             admitted = len(reqs)
-            # host-side liveness bound — a synced read of `occupied`
-            # here would serialize admission against the decode chunk;
-            # this is conservative only for first-token EOS (one chunk
-            # of bounded waste in that rare case)
-            may_live = any(
-                rq.max_new_tokens > 1
-                and (gcfg.eos_token is None
-                     or prompts_np[rq.rid, -1] != gcfg.eos_token)
-                for rq in reqs)
 
         counts = ()
-        if occupied.any() or may_live:
+        if chunked and prefill_left.any():
+            # mixed wave-step: a scan of (decode step + prefill chunk)
+            # sub-rounds, sized to the outstanding prefill work (slots
+            # landing mid-scan decode for the remaining sub-rounds)
+            decode_live = occupied.any()
+            active_left = prefill_left[prefill_left > 0]
+            k_len = int(min(K, active_left.max()))
+            # reference-schedule bookkeeping: which rngs[t] each decode
+            # sub-round consumes.  While nothing decodes, sub-rounds
+            # before the first landing (index f) burn side keys only;
+            # the first landing takes rngs[0]; decode resumes at rngs[1]
+            # right after it — token-exact vs rollout.generate on a
+            # single-wave batch.
+            if decode_live:
+                key_idx = list(range(next_key, next_key + k_len))
+                next_key += k_len
+                land_r0 = -1
+            else:
+                f = int(active_left.min()) - 1
+                if k_len <= f:          # no landing inside this scan
+                    key_idx = [None] * k_len
+                    land_r0 = -1
+                else:
+                    start = max(next_key, 1)
+                    key_idx = [None] * (f + 1) + \
+                        [start + j for j in range(k_len - f - 1)]
+                    land_r0 = f if next_key == 0 else -1
+                    next_key = start + (k_len - f - 1)
+            keys = jnp.stack([
+                jax.random.fold_in(side_step,
+                                   1_000_000 + round_idx * (K + 1) + j)
+                if i is None
+                else (rngs[i] if i < N
+                      else jax.random.fold_in(side_step, i))
+                for j, i in enumerate(key_idx)])
+            k_lands = jnp.stack([
+                rngs[0] if j == land_r0
+                else jax.random.fold_in(side_admit,
+                                        round_idx * (K + 1) + j)
+                for j in range(k_len)])
+            state, (d, p) = mixed_fn(params, state, keys, k_lands)
+            counts = np.asarray(d)
+            table.record_round(counts, np.asarray(p))
+            occupied = np.asarray(state["occupied"])
+            if gcfg.measure_ttft:
+                # free here: the occupied read above already synced
+                now = time.monotonic()
+                landed = (prefill_left > 0) & (prefill_left <= k_len)
+                for s in np.nonzero(landed)[0]:
+                    ttft[table.slot_req[s]] = now - t_start
+            prefill_left = np.maximum(prefill_left - k_len, 0)
+        elif occupied.any() or may_live:
             # decode only when a slot can be occupied: requests that
             # finished at admission (budget 1, prompt-dead) never burn
             # wave steps
@@ -296,7 +544,7 @@ def serve(params, cfg: ModelConfig, prompts, rng, gcfg: GenServeConfig,
             table.record_step(counts)
             occupied = np.asarray(state["occupied"])
 
-        table.retire_finished(occupied)
+        table.retire_finished(occupied | (prefill_left > 0))
         t1 = time.monotonic()
         occ = float(np.mean(counts)) if len(counts) else 0.0
         rounds.append((t0, t1, occ, admitted))
@@ -313,7 +561,16 @@ def serve(params, cfg: ModelConfig, prompts, rng, gcfg: GenServeConfig,
              "decode_steps": table.decode_steps,
              "slot_steps": table.slot_steps,
              "mean_occupancy": table.mean_occupancy(),
+             "busy_occupancy": table.busy_occupancy(),
              "occupancy_trace": list(table.occupancy_trace),
+             "prefill_trace": list(table.prefill_trace),
+             "prefill_rounds": table.prefill_rounds,
+             "prefill_slot_steps": table.prefill_slot_steps,
+             "prefill_chunk": C, "prompt_len": P,
+             "max_new_tokens": N,
+             "prefill_rounds_per_req":
+                 float(np.mean(np.ceil(plens_np / C))) if chunked else 0.0,
+             "ttft": ttft,
              "rounds": rounds, "prefills": n_prefills,
              "admitted": table.admitted, "retired": table.retired}
     return res, stats

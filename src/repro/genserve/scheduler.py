@@ -7,8 +7,15 @@ of the ``wave`` decode slots, admits queued requests into freed slots
 completion latency without changing which tokens each request produces),
 and records the per-step occupancy trace that the cost-model parity
 checks consume.  The decoder (``genserve.decoder``) drives it: one
-``admit`` batch per host round when slots are free, retirements after
-every decode chunk from the device's ``occupied`` vector.
+``admit``/``install`` batch per host round when slots are free,
+retirements after every decode chunk from the device's ``occupied``
+vector (a slot mid-chunked-prefill counts as occupied until it lands).
+Under chunked admission the table additionally records each mixed
+sub-round's prefilling-slot count (``prefill_trace``), keeping both the
+decode occupancy (``mean_occupancy`` — prefill-only sub-rounds are
+explicit zero-decode entries, not missing ones) and the busy occupancy
+(``busy_occupancy`` — decode or prefill work per round) honest against
+``core.plan.predicted_occupancy``.
 
 Invariants (asserted):
   * a slot is FREE or holds exactly one in-flight request;
@@ -73,6 +80,8 @@ class SlotTable:
         self.admitted = 0
         self.retired = 0
         self.occupancy_trace: List[int] = []   # active slots per decode step
+        self.prefill_trace: List[int] = []     # prefilling slots per mixed
+        #                                        round (chunked admission)
 
     # -- state ----------------------------------------------------------
     @property
@@ -103,17 +112,52 @@ class SlotTable:
 
     # -- statistics -----------------------------------------------------
     def record_step(self, active_counts: Sequence[int]) -> None:
+        """Pure decode rounds: one trace entry per wave decode step."""
         self.occupancy_trace.extend(int(c) for c in active_counts)
+
+    def record_round(self, decode_counts: Sequence[int],
+                     prefill_counts: Sequence[int]) -> None:
+        """Mixed wave-step round (chunked admission): records each
+        sub-round's decode count *and* prefill count explicitly, so a
+        prefill-only sub-round shows up as zero decode progress instead
+        of silently not existing — this keeps ``mean_occupancy`` vs the
+        cost model's ``predicted_occupancy`` an honest comparison under
+        mixed rounds (and ``busy_occupancy`` credits the prefill
+        work)."""
+        assert len(decode_counts) == len(prefill_counts)
+        self.occupancy_trace.extend(int(c) for c in decode_counts)
+        self.prefill_trace.extend(int(c) for c in prefill_counts)
 
     @property
     def decode_steps(self) -> int:
+        """Device rounds with a decode half (every round under mixed
+        wave-stepping — prefill-only rounds count, with zero decode)."""
         return len(self.occupancy_trace)
 
     @property
     def slot_steps(self) -> int:
         return int(sum(self.occupancy_trace))
 
+    @property
+    def prefill_rounds(self) -> int:
+        return len(self.prefill_trace)
+
+    @property
+    def prefill_slot_steps(self) -> int:
+        """Total per-slot prefill-chunk executions across mixed rounds."""
+        return int(sum(self.prefill_trace))
+
     def mean_occupancy(self) -> float:
         if not self.occupancy_trace:
             return 0.0
         return self.slot_steps / self.decode_steps
+
+    def busy_occupancy(self) -> float:
+        """Mean slots doing *any* work (decode step or prefill chunk)
+        per device round — the occupancy figure comparable against
+        ``core.plan.predicted_occupancy(..., prefill_rounds=...)``,
+        which prices admission instead of assuming it free."""
+        if not self.occupancy_trace:
+            return 0.0
+        return (self.slot_steps + self.prefill_slot_steps) \
+            / self.decode_steps

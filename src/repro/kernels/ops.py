@@ -26,6 +26,14 @@ def flash_attention(q, k, v, q_pos, k_pos, *, causal=True, window=None,
     contiguous = (Sq == Sk and q_pos.ndim == 1 and k_valid is None)
     if not contiguous:
         from repro.models import attention as attn
+        per_row = (q_pos.ndim > 1 or k_pos.ndim > 1
+                   or (k_valid is not None and k_valid.ndim > 1))
+        if per_row:
+            # ragged per-row positions (chunked prefill): the blockwise
+            # jnp path shares bias across rows — use the plain oracle
+            return attn.plain_attention(q, k, v, q_pos, k_pos,
+                                        causal=causal, window=window,
+                                        cap=cap, k_valid=k_valid)
         return attn.chunked_attention(q, k, v, q_pos, k_pos, causal=causal,
                                       window=window, cap=cap,
                                       k_valid=k_valid)

@@ -3,11 +3,15 @@
 
 Requests stream through the genserve engine: at most --wave sequences
 decode concurrently, finished slots (EOS or budget) are recycled via
-prefill injection, and the report includes tokens/s plus the measured
+prefill injection — one-shot whole-prompt admission by default, or
+*chunked prefill* (--prefill-chunk N: mixed wave-steps that ingest up to
+N prompt tokens per round alongside decode, so a long prompt never
+stalls the wave).  The report includes tokens/s, time-to-first-token
+p50/p95 (the headline metric chunked prefill moves) and the measured
 mean decode-wave occupancy next to the cost model's ideal.
 
     PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b --smoke \
-        --batch 16 --wave 4 --prompt-len 32 --new-tokens 16
+        --batch 16 --wave 4 --prompt-len 32 --new-tokens 16 --prefill-chunk 8
 """
 from __future__ import annotations
 
@@ -18,8 +22,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import archs
-from repro.core.plan import decode_wave, predicted_occupancy
+from repro.core.plan import decode_wave, predicted_occupancy, prefill_rounds
 from repro.genserve import adapter as genserve
+from repro.genserve.adapter import ttft_quantiles
 from repro.launch.mesh import make_host_mesh
 from repro.models import transformer as T
 from repro.rl.rollout import SamplerConfig
@@ -36,6 +41,9 @@ def main():
                     help="decode slots (0 = core.plan.decode_wave(batch))")
     ap.add_argument("--decode-chunk", type=int, default=4,
                     help="decode steps per host round")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked admission: prompt tokens ingested per "
+                         "mixed wave round (0 = one-shot prefill)")
     ap.add_argument("--eos-token", type=int, default=None,
                     help="retire sequences on this token id")
     ap.add_argument("--temperature", type=float, default=0.0,
@@ -57,24 +65,38 @@ def main():
                             eos_token=args.eos_token,
                             greedy=args.temperature <= 0)
     with mesh:
-        gen = lambda: genserve.generate(params, cfg, prompts,
-                                        jax.random.PRNGKey(1), sampler,
-                                        wave=wave, fast_path=False,
-                                        decode_chunk=args.decode_chunk)
-        gen()            # warm-up: compile the admit/chunk programs
+        gen = lambda **kw: genserve.generate(
+            params, cfg, prompts, jax.random.PRNGKey(1), sampler,
+            wave=wave, fast_path=False, decode_chunk=args.decode_chunk,
+            prefill_chunk=args.prefill_chunk, **kw)
+        gen()            # warm-up: compile the engine programs
         t0 = time.time()
-        ro, stats = gen()
-        jax.block_until_ready(ro["sequences"])
+        ro, stats = gen()   # timed run is uninstrumented (TTFT stamping
+        jax.block_until_ready(ro["sequences"])   # syncs admission)
         dt = time.time() - t0
+        _, ttft_stats = gen(measure_ttft=True)
     valid = float(jnp.sum(ro["mask"]))
-    ideal = predicted_occupancy(args.batch, wave=wave)
+    rounds = prefill_rounds(args.prompt_len, args.prefill_chunk)
+    ideal = predicted_occupancy(args.batch, wave=wave,
+                                prefill_rounds=rounds,
+                                max_new_tokens=args.new_tokens)
+    p50, p95 = ttft_quantiles(ttft_stats)
+    admission = (f"chunked (C={args.prefill_chunk})"
+                 if args.prefill_chunk else "one-shot")
     print(f"arch={cfg.name} engine={stats['engine']} wave={stats['wave']} "
-          f"batch={args.batch}")
+          f"batch={args.batch} admission={admission}")
     print(f"generated {ro['gen_tokens'].shape} in {dt:.2f}s "
           f"({valid / dt:.1f} valid tok/s; {stats['decode_steps']} decode "
-          f"steps, {stats['prefills']} prefill injections)")
-    print(f"mean wave occupancy: {stats['mean_occupancy']:.2f} "
-          f"(cost-model ideal {ideal:.2f})")
+          f"rounds, {stats['prefills']} prefill injections, "
+          f"{stats.get('prefill_rounds', 0)} prefill-chunk rounds)")
+    print(f"ttft p50={p50 * 1e3:.1f}ms p95={p95 * 1e3:.1f}ms")
+    if args.prefill_chunk:
+        print(f"busy wave occupancy (decode + prefill): "
+              f"{stats['busy_occupancy']:.2f} "
+              f"(cost-model ideal {ideal:.2f})")
+    else:
+        print(f"mean wave occupancy: {stats['mean_occupancy']:.2f} "
+              f"(cost-model ideal {ideal:.2f})")
     print("sample:", ro["sequences"][0, :24].tolist())
 
 

@@ -268,7 +268,12 @@ def multihead_attention(q, k, v, q_pos, k_pos, *, causal=True, window=None,
         return kernel_ops.flash_attention(
             q, k, v, q_pos, k_pos, causal=causal, window=window, cap=cap,
             k_valid=k_valid)
-    if Sq * Sk <= _CHUNK_THRESHOLD ** 2:
+    # per-row positions / validity (chunked prefill against a ragged
+    # cache): the blockwise path only supports shared 1-D positions, so
+    # per-row shapes stay on the plain path (chunks are small: Sq == C)
+    per_row = (jnp.ndim(q_pos) > 1 or jnp.ndim(k_pos) > 1
+               or (k_valid is not None and jnp.ndim(k_valid) > 1))
+    if per_row or Sq * Sk <= _CHUNK_THRESHOLD ** 2:
         return plain_attention(q, k, v, q_pos, k_pos, causal=causal,
                                window=window, cap=cap, k_valid=k_valid)
     return chunked_attention(q, k, v, q_pos, k_pos, causal=causal,

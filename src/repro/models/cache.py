@@ -89,6 +89,20 @@ def scatter_slots(dst_blocks, src_blocks, slot_mask):
         dst_blocks, src_blocks)
 
 
+def zero_slots(blocks, slot_mask):
+    """Zero the cache rows of slots where `slot_mask` [B] is True.
+
+    Chunked admission starts a slot's prefill from zero-initialized
+    state (recurrent mixers accumulate chunk by chunk), so a freshly
+    installed slot must not inherit its previous occupant's SSM/RWKV
+    state or cm_shift — the KV rows are zeroed too for hygiene (their
+    stale contents are already masked by position validity)."""
+    return jax.tree_util.tree_map(
+        lambda l: jnp.where(_slot_axes_mask(slot_mask, l),
+                            jnp.zeros((), l.dtype), l),
+        blocks)
+
+
 def ring_slot_positions(cache_len: int, window: Optional[int], pos):
     """Absolute position stored in each cache slot at decode step `pos`.
 
@@ -109,40 +123,95 @@ def ring_slot_positions(cache_len: int, window: Optional[int], pos):
     return k_pos, valid
 
 
-def write_kv(cache_k, cache_v, k_new, v_new, pos, window: Optional[int]):
-    """Write one token's k/v at decode position `pos`.
+def write_kv(cache_k, cache_v, k_new, v_new, pos, window: Optional[int],
+             valid=None):
+    """Write a chunk of Sq consecutive tokens' k/v starting at `pos`.
 
-    cache_k: [B, L, KV, hd]; k_new: [B, 1, KV, hd].  `pos` is a scalar
-    (all rows write the same slot) or a [B] vector of per-row positions
-    (batched wave decode: each slot writes at its own ring offset)."""
+    cache_k: [B, L, KV, hd]; k_new: [B, Sq, KV, hd].  `pos` is a scalar
+    (all rows write at the same start position) or a [B] vector of
+    per-row start positions (batched wave decode / chunked prefill:
+    every slot writes at its own cursor — token j of row b lands at
+    absolute position pos[b] + j).  `valid` optionally masks individual
+    chunk tokens ([B, Sq] bool): invalid tokens leave the cache
+    untouched (the chunked-prefill partial-last-chunk case).
+
+    Ring caches (window not None) wrap at slot p % L; when a chunk spans
+    more than one lap of the ring, only the latest token per slot
+    survives (matching sequential writes).  Full caches clamp
+    out-of-range positions to the last slot (the single-token decode
+    guard), keeping the first such token — for a whole-sequence write
+    this is exactly the keep-first-L truncation of the former
+    ``prefill_kv`` special case (Sq == S, pos == 0), which this
+    function now subsumes."""
+    B, C = k_new.shape[:2]
     L = cache_k.shape[1]
     p = jnp.asarray(pos)
-    if p.ndim == 0:
+    if p.ndim == 0 and C == 1 and valid is None:
+        # scalar single-token decode fast path
         slot = p % L if window is not None else jnp.minimum(p, L - 1)
         cache_k = jax.lax.dynamic_update_slice(
             cache_k, k_new.astype(cache_k.dtype), (0, slot, 0, 0))
         cache_v = jax.lax.dynamic_update_slice(
             cache_v, v_new.astype(cache_v.dtype), (0, slot, 0, 0))
         return cache_k, cache_v
-    slot = p % L if window is not None else jnp.minimum(p, L - 1)
-    rows = jnp.arange(cache_k.shape[0])
-    cache_k = cache_k.at[rows, slot].set(k_new[:, 0].astype(cache_k.dtype))
-    cache_v = cache_v.at[rows, slot].set(v_new[:, 0].astype(cache_v.dtype))
+    if p.ndim == 0 and valid is None:
+        # statically-known scalar start (the one-shot prefill and any
+        # within-capacity chunk): a contiguous slice update beats the
+        # general scatter — take it whenever the chunk provably neither
+        # overflows the cache nor wraps the ring
+        try:
+            start = int(p)
+        except (TypeError, jax.errors.TracerIntegerConversionError):
+            start = None
+        if start is not None:
+            if window is None and start + C <= L:
+                slot0 = start
+            elif window is not None and start % L + C <= L:
+                slot0 = start % L
+            else:
+                slot0 = None
+            if slot0 is not None:
+                cache_k = jax.lax.dynamic_update_slice(
+                    cache_k, k_new.astype(cache_k.dtype), (0, slot0, 0, 0))
+                cache_v = jax.lax.dynamic_update_slice(
+                    cache_v, v_new.astype(cache_v.dtype), (0, slot0, 0, 0))
+                return cache_k, cache_v
+    positions = jnp.broadcast_to(
+        jnp.asarray(p, jnp.int32).reshape((-1, 1)) + jnp.arange(C), (B, C))
+    if valid is None:
+        keep = jnp.ones((B, C), bool)
+    else:
+        keep = valid
+    if window is not None:
+        # within-chunk ring overwrites: a token is superseded when a
+        # later valid token maps to the same slot (positions congruent
+        # mod L) — drop it so scatter order cannot matter
+        last = jnp.max(jnp.where(keep, positions, -1), axis=1, keepdims=True)
+        keep = keep & (positions + L > last)
+        slot = positions % L
+    else:
+        # full cache: clamp past-the-end positions to the last slot and
+        # keep only the first such token per row (sequentially, later
+        # clamped writes would land on top — but the one-shot prefill
+        # semantics this subsumes keep the first L tokens)
+        over = keep & (positions >= L - 1)
+        first_over = jnp.min(jnp.where(over, positions, 2 ** 30), axis=1,
+                             keepdims=True)
+        keep = keep & ((positions < L - 1) | (positions == first_over))
+        slot = jnp.minimum(positions, L - 1)
+    slot = jnp.where(keep, slot, L)       # out of bounds -> update dropped
+    rows = jnp.broadcast_to(jnp.arange(B)[:, None], (B, C))
+    cache_k = cache_k.at[rows, slot].set(k_new.astype(cache_k.dtype),
+                                         mode="drop")
+    cache_v = cache_v.at[rows, slot].set(v_new.astype(cache_v.dtype),
+                                         mode="drop")
     return cache_k, cache_v
 
 
 def prefill_kv(cache_k, cache_v, k, v, window: Optional[int]):
-    """Fill cache from a prefill pass. k: [B, S, KV, hd]."""
-    S = k.shape[1]
-    L = cache_k.shape[1]
-    if window is None or S <= L:
-        n = min(S, L)
-        cache_k = cache_k.at[:, :n].set(k[:, :n].astype(cache_k.dtype))
-        cache_v = cache_v.at[:, :n].set(v[:, :n].astype(cache_v.dtype))
-        return cache_k, cache_v
-    # ring layout: keep last L positions at slot p % L
-    keep = jnp.arange(S - L, S)
-    slots = keep % L
-    cache_k = cache_k.at[:, slots].set(k[:, keep].astype(cache_k.dtype))
-    cache_v = cache_v.at[:, slots].set(v[:, keep].astype(cache_v.dtype))
-    return cache_k, cache_v
+    """Fill cache from a one-shot prefill pass. k: [B, S, KV, hd].
+
+    Thin alias over the generalized ``write_kv`` (chunk write starting
+    at position 0): full caches keep the first L tokens, ring caches the
+    last L — identical layout to writing the sequence token by token."""
+    return write_kv(cache_k, cache_v, k, v, 0, window)

@@ -47,16 +47,27 @@ def init_mamba(key, cfg: ModelConfig, dtype):
     }
 
 
-def _causal_conv(x, w, b, state=None):
+def _causal_conv(x, w, b, state=None, n_valid=None):
     """Depthwise causal conv. x: [B,S,di], w: [dc,di].
 
-    Returns (y, new_state) where state is the trailing dc-1 inputs."""
+    Returns (y, new_state) where state is the trailing dc-1 inputs.
+    ``n_valid`` ([B] int) makes the state window end at each row's last
+    *valid* input instead of the chunk end (partial chunked-prefill
+    chunks: trailing invalid tokens must not enter the carried state)."""
     dc = w.shape[0]
     if state is None:
         xp = jnp.pad(x, ((0, 0), (dc - 1, 0), (0, 0)))
     else:
         xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
-    new_state = xp[:, -(dc - 1):, :] if dc > 1 else None
+    if dc <= 1:
+        new_state = None
+    elif n_valid is None:
+        new_state = xp[:, -(dc - 1):, :]
+    else:
+        # xp row layout: [dc-1 carried inputs | chunk]; the dc-1 inputs
+        # ending at the last valid token start at index n_valid
+        idx = n_valid[:, None] + jnp.arange(dc - 1)
+        new_state = jnp.take_along_axis(xp, idx[..., None], axis=1)
     y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(dc)) + b
     return y, new_state
 
@@ -127,16 +138,25 @@ def ssm_scan(dt, Bm, Cm, x, A, D, h0, chunk=_CHUNK):
 
 def apply_mamba(params, cfg: ModelConfig, x,
                 state: Optional[dict] = None,
-                return_state: bool = False):
-    """x: [B,S,d]. state: {"conv": [B,dc-1,di], "ssm": [B,di,ds]}."""
+                return_state: bool = False, valid=None):
+    """x: [B,S,d]. state: {"conv": [B,dc-1,di], "ssm": [B,di,ds]}.
+
+    ``valid`` ([B,S] bool) marks real tokens in a chunked-prefill chunk:
+    invalid (trailing) tokens freeze the recurrence — dt is zeroed so
+    the SSM state passes through unchanged, and the conv window ends at
+    each row's last valid input.  Outputs at invalid positions are
+    garbage and must be discarded by the caller."""
     di = cfg.mamba_d_inner
     xz = x @ params["in_proj"]
     u, z = xz[..., :di], xz[..., di:]
     conv_state = state["conv"] if state is not None else None
+    n_valid = jnp.sum(valid, axis=1) if valid is not None else None
     u, new_conv = _causal_conv(u, params["conv_w"], params["conv_b"],
-                               conv_state)
+                               conv_state, n_valid=n_valid)
     u = jax.nn.silu(u)
     dt, Bm, Cm, A = _ssm_params(params, cfg, u)
+    if valid is not None:
+        dt = dt * valid[..., None]     # exp(0*A)=1, 0*B*x=0: state frozen
     D = params["D"].astype(jnp.float32)
     h0 = state["ssm"] if state is not None else None
     y, h_end = ssm_scan(dt, Bm, Cm, u, A, D, h0,

@@ -120,8 +120,16 @@ def rwkv_scan(r, k, v, logw, u, state0, chunk=_CHUNK):
 
 
 def apply_rwkv(params, cfg: ModelConfig, x,
-               state: Optional[dict] = None, return_state: bool = False):
-    """x: [B,S,d]. state: {"tm_shift":[B,d], "wkv":[B,H,N,N]}."""
+               state: Optional[dict] = None, return_state: bool = False,
+               valid=None):
+    """x: [B,S,d]. state: {"tm_shift":[B,d], "wkv":[B,H,N,N]}.
+
+    ``valid`` ([B,S] bool) marks real tokens in a chunked-prefill chunk:
+    invalid (trailing) tokens freeze the recurrence — their decay is
+    forced to 1 and their key contribution to 0, so the wkv state passes
+    through unchanged, and ``tm_shift`` carries each row's last *valid*
+    token.  Outputs at invalid positions are garbage and must be
+    discarded by the caller."""
     B, S, d = x.shape
     H, N = cfg.rwkv_n_heads, cfg.rwkv_head_dim
     if state is not None:
@@ -132,6 +140,10 @@ def apply_rwkv(params, cfg: ModelConfig, x,
         shifted = token_shift(x)
         wkv0 = None
     r, k, v, g, logw = _project(params, cfg, x, shifted)
+    if valid is not None:
+        vm = valid[:, :, None, None]
+        k = k * vm                       # no state / attention contribution
+        logw = jnp.where(vm, logw, 0.0)  # decay 1: state passes through
     r = hint(r, "rwkv_heads")
     k = hint(k, "rwkv_heads")
     v = hint(v, "rwkv_heads")
@@ -146,7 +158,12 @@ def apply_rwkv(params, cfg: ModelConfig, x,
     y = y.reshape(B, S, d) * params["out_norm"]["scale"].astype(y.dtype)
     y = (y.astype(x.dtype) * g) @ params["w_o"]
     if return_state:
-        return y, {"tm_shift": x[:, -1, :], "wkv": wkv_end}
+        if valid is None:
+            tm = x[:, -1, :]
+        else:
+            idx = jnp.clip(jnp.sum(valid, axis=1) - 1, 0, S - 1)
+            tm = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
+        return y, {"tm_shift": tm, "wkv": wkv_end}
     return y
 
 

@@ -205,6 +205,118 @@ def forward(params, cfg: ModelConfig, inputs: Dict[str, Any], *,
 
 
 # ---------------------------------------------------------------------------
+# Chunked prefill (bounded prompt-ingestion steps against a live cache)
+# ---------------------------------------------------------------------------
+
+def _layer_prefill_chunk(p, cfg: ModelConfig, spec, x, cache_entry, pos,
+                         valid, n_valid, *, long_mode):
+    """x: [B,C,d] — one bounded prompt chunk per slot.  Returns
+    (x, new_cache_entry).
+
+    `pos` [B] is each slot's chunk-start cursor; `valid` [B,C] marks the
+    real tokens (a slot's final chunk may be partial; a slot with
+    n_valid == 0 passes through with its state untouched).  Attention
+    runs against the *pre-write* cache concatenated with the fresh chunk
+    k/v — causal-within-chunk plus the ragged-cache bias over per-row
+    absolute positions — then writes the chunk at per-row cursors, so a
+    sequence of chunk steps reproduces the one-shot prefill exactly
+    (ring windows included: every in-window position is still resident
+    when the chunk that needs it arrives)."""
+    new_entry = {}
+    B, C = x.shape[:2]
+    q_pos = jnp.asarray(pos, jnp.int32)[:, None] + jnp.arange(C)     # [B,C]
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if spec.mixer == Mixer.ATTENTION:
+        window = cache_mod.effective_window(cfg, spec, long_mode)
+        q, k, v = attn_mod.qkv_project(p["attn"], cfg, h, q_pos)
+        ck0, cv0 = cache_entry["k"], cache_entry["v"]
+        L = ck0.shape[1]
+        # cache contents *before* this chunk (cursor pos-1); pos == 0
+        # rows see an all-invalid cache
+        k_pos_c, valid_c = cache_mod.ring_slot_positions(L, window, pos - 1)
+        y = attn_mod.multihead_attention(
+            q, jnp.concatenate([ck0.astype(k.dtype), k], axis=1),
+            jnp.concatenate([cv0.astype(v.dtype), v], axis=1),
+            q_pos, jnp.concatenate([k_pos_c, q_pos], axis=1),
+            causal=True, window=window, cap=cfg.attn_softcap,
+            k_valid=jnp.concatenate([valid_c, valid], axis=1))
+        ck, cv = cache_mod.write_kv(ck0, cv0, k, v, pos, window, valid=valid)
+        new_entry.update(k=ck, v=cv)
+        y = y.reshape(B, C, -1) @ p["attn"]["wo"]
+    elif spec.mixer == Mixer.MAMBA:
+        st = {kk: cache_entry[kk] for kk in ("conv", "ssm")}
+        y, st_new = mamba_mod.apply_mamba(p["mamba"], cfg, h, state=st,
+                                          return_state=True, valid=valid)
+        new_entry.update(st_new)
+    elif spec.mixer == Mixer.RWKV6:
+        st = {"tm_shift": cache_entry["tm_shift"], "wkv": cache_entry["wkv"]}
+        y, st_new = rwkv_mod.apply_rwkv(p["rwkv"], cfg, h, state=st,
+                                        return_state=True, valid=valid)
+        new_entry.update(st_new)
+    else:
+        raise ValueError(spec.mixer)
+    x = x + y
+
+    h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+    if spec.moe:
+        y, _ = moe_mod.apply_moe(p["moe"], cfg, spec.ffn, h)
+    else:
+        if spec.ffn == FFN.RWKV_CHANNEL:
+            shifted = jnp.concatenate(
+                [cache_entry["cm_shift"][:, None, :].astype(h.dtype),
+                 h[:, :-1]], axis=1)
+            y = apply_ffn(p["ffn"], cfg, spec.ffn, h, shifted=shifted)
+            idx = jnp.clip(n_valid - 1, 0, C - 1)
+            new_entry["cm_shift"] = jnp.take_along_axis(
+                h, idx[:, None, None], axis=1)[:, 0]
+        else:
+            y = apply_ffn(p["ffn"], cfg, spec.ffn, h)
+    return x + y, new_entry
+
+
+def prefill_chunk_step(params, cfg: ModelConfig, tokens, cache, *,
+                       n_valid, long_mode: bool = False):
+    """One bounded prompt-ingestion step: tokens [B, C] int32 chunks.
+
+    ``cache["pos"]`` is a [B] vector of per-slot prefill cursors (tokens
+    already ingested); ``n_valid`` [B] counts the real tokens in each
+    row's chunk (0 = slot idle this round: its cache entry passes
+    through untouched — the caller merges rows, see genserve).  Returns
+    (last_logits [B, V], new_cache): `last_logits` is each row's logit
+    at its last valid chunk token — the first-token sampling point when
+    a slot's final chunk lands — and `new_cache["pos"]` advances by
+    ``n_valid``.  A sequence of chunk steps over a prompt is
+    numerically equivalent to the one-shot ``forward(return_cache)``
+    prefill (the genserve parity tests pin this)."""
+    assert not cfg.is_encoder_only, "encoder-only models have no decode path"
+    pos = jnp.asarray(cache["pos"], jnp.int32)
+    B, C = tokens.shape
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    valid = jnp.arange(C)[None, :] < n_valid[:, None]
+    x = embed_tokens(params["embed"], cfg, tokens)
+    x = hint(x, "decode_residual")
+
+    def scan_body(x, inp):
+        bp, centry = inp
+        new_entries = {}
+        for j, spec in enumerate(cfg.pattern):
+            x, ne = _layer_prefill_chunk(bp[f"layer{j}"], cfg, spec, x,
+                                         centry[f"layer{j}"], pos, valid,
+                                         n_valid, long_mode=long_mode)
+            new_entries[f"layer{j}"] = ne
+        return x, new_entries
+
+    x, new_blocks = jax.lax.scan(scan_body, x,
+                                 (params["blocks"], cache["blocks"]))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    idx = jnp.clip(n_valid - 1, 0, C - 1)
+    h_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
+    logits = unembed(params["embed"], cfg, h_last)
+    new_cache = {"blocks": new_blocks, "pos": pos + n_valid}
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
 # Decode (single token, serve_step)
 # ---------------------------------------------------------------------------
 

@@ -56,6 +56,8 @@ class RLConfig:
     # force a path
     gen_engine: str = "auto"
     decode_chunk: int = 1            # genserve decode steps per host round
+    prefill_chunk: int = 0           # genserve chunked admission (tokens
+    #                                  per mixed round; 0 = one-shot)
 
 
 def default_plan(wf: workflow.RLWorkflow, n_devices: Optional[int] = None):

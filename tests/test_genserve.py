@@ -262,6 +262,173 @@ def test_sjf_admission_policy():
     assert s_sjf["admitted"] == s_sjf["retired"] == B
 
 
+# ---------------------------------------------------------------------------
+# Chunked prefill (mixed wave-step admission)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk,dchunk", [(1, 1), (3, 1), (5, 1), (8, 1),
+                                          (3, 3), (2, 4)])
+def test_chunked_admission_single_wave_exact(setup, chunk, dchunk):
+    """Tentpole pin: chunked admission on a single-wave batch is
+    token-exact vs the reference path under sampling — the landing
+    round's first-token draw consumes rngs[0] exactly like the one-shot
+    admit, no decode key is burned during prefill rounds, and decode
+    resumes at rngs[1] whatever the mixed-scan length (dchunk > 1 pins
+    the multi-sub-round key bookkeeping)."""
+    cfg, params = setup
+    prompts = prompts_for(4)
+    sampler = rollout.SamplerConfig(max_new_tokens=N, temperature=1.0,
+                                    eos_token=EOS)
+    ref = rollout.generate(params, cfg, prompts, jax.random.PRNGKey(7),
+                           sampler)
+    gcfg = GenServeConfig(wave=4, max_new_tokens=N, eos_token=EOS,
+                          prefill_chunk=chunk, decode_chunk=dchunk,
+                          measure_ttft=True)
+    got, stats = serve(params, cfg, prompts, jax.random.PRNGKey(7), gcfg)
+    assert_rollout_equal(ref, got)
+    assert stats["prefill_slot_steps"] == 4 * -(-P // chunk)
+    assert all(t > 0 for t in stats["ttft"].values())
+
+
+def _random_trace_case(rng, case):
+    """One random admission trace: mixed windows/GQA, random budgets,
+    random EOS, prompts longer than the chunk."""
+    window = rng.choice([None, 4])
+    gqa = bool(rng.integers(0, 2))
+    cfg = ModelConfig(name=f"gs-prop-{case}", n_layers=2, d_model=64,
+                      n_heads=4 if gqa else 2, n_kv_heads=2,
+                      head_dim=16 if gqa else 32, d_ff=128,
+                      vocab_size=VOCAB_SIZE, dtype="float32",
+                      pattern=(LayerSpec(window=window),))
+    params = T.init_params(jax.random.PRNGKey(case), cfg)
+    B = int(rng.integers(6, 12))
+    W = int(rng.integers(2, 5))
+    chunk = int(rng.integers(1, P))          # prompts exceed the chunk
+    dchunk = int(rng.integers(1, 5))         # mixed scans span sub-rounds
+    eos = int(rng.integers(0, VOCAB_SIZE)) if rng.integers(0, 2) else None
+    lens = rng.integers(1, N + 1, B).tolist() if rng.integers(0, 2) \
+        else None
+    prompts = jax.random.randint(jax.random.PRNGKey(100 + case), (B, P),
+                                 0, cfg.vocab_size, jnp.int32)
+    return cfg, params, prompts, B, W, chunk, dchunk, eos, lens
+
+
+@pytest.mark.parametrize("case", range(4))
+def test_chunked_admission_random_traces(case):
+    """Property-style pin: over random admission traces (recycling,
+    ring windows, GQA, random EOS, random budgets, prompts longer than
+    ``prefill_chunk``) chunked admission reproduces the one-shot admit
+    path token-for-token under greedy decoding."""
+    rng = np.random.default_rng(1234 + case)
+    cfg, params, prompts, B, W, chunk, dchunk, eos, lens = \
+        _random_trace_case(rng, case)
+    kw = dict(wave=W, max_new_tokens=N, greedy=True, eos_token=eos)
+    ref, s_ref = serve(params, cfg, prompts, KEY, GenServeConfig(**kw),
+                       gen_lens=lens)
+    got, s_got = serve(params, cfg, prompts, KEY,
+                       GenServeConfig(prefill_chunk=chunk,
+                                      decode_chunk=dchunk,
+                                      measure_ttft=True, **kw),
+                       gen_lens=lens)
+    assert_rollout_equal(ref, got)
+    assert s_got["admitted"] == s_got["retired"] == B
+    assert s_got["prefill_slot_steps"] >= B * (P // chunk)
+    # every request saw a first token
+    assert len(s_got["ttft"]) == B
+
+
+def test_chunked_admission_ragged_prompts(setup):
+    """Per-request prompt lengths: each request's outputs equal its own
+    unpadded reference rollout (per-slot landing positions)."""
+    cfg, params = setup
+    B = 6
+    pl = [8, 3, 5, 8, 2, 6]
+    prompts = np.array(prompts_for(B, key=17))
+    gcfg = GenServeConfig(wave=3, max_new_tokens=N, greedy=True,
+                          prefill_chunk=3)
+    got, stats = serve(params, cfg, prompts, KEY, gcfg, prompt_lens=pl)
+    for i, L in enumerate(pl):
+        ref = rollout.generate(
+            params, cfg, jnp.asarray(prompts[i:i + 1, :L]), KEY,
+            rollout.SamplerConfig(max_new_tokens=N, greedy=True))
+        np.testing.assert_array_equal(np.asarray(ref["gen_tokens"])[0],
+                                      np.asarray(got["gen_tokens"])[i])
+    # short prompts land in fewer rounds than the padded width implies
+    assert stats["prefill_slot_steps"] \
+        == sum(-(-l // 3) for l in pl)
+
+
+def test_mixed_rounds_honest_occupancy(setup):
+    """Satellite pin: prefill-only rounds are recorded as zero decode
+    progress (mean_occupancy is honest), prefill work is credited in
+    busy_occupancy, and the measured busy figure respects the
+    prefill-aware predicted_occupancy bound."""
+    cfg, params = setup
+    B, W, C = 10, 4, 2
+    lens = [1, 2, N, 3, N, 1, 2, N, 3, N]
+    prompts = prompts_for(B, key=23)
+    gcfg = GenServeConfig(wave=W, max_new_tokens=N, greedy=True,
+                          prefill_chunk=C)
+    got, stats = serve(params, cfg, prompts, KEY, gcfg, gen_lens=lens)
+    np.testing.assert_array_equal(np.asarray(got["mask"]).sum(1), lens)
+    # trace lengths agree: every mixed round contributed to both traces
+    assert stats["prefill_rounds"] <= stats["decode_steps"]
+    assert stats["prefill_slot_steps"] == B * -(-P // C)
+    ideal = plan_mod.predicted_occupancy(
+        B, wave=W, gen_lens=lens,
+        prefill_rounds=plan_mod.prefill_rounds(P, C))
+    assert 0 < stats["busy_occupancy"] <= ideal + 1e-9
+    # prefill-only rounds drag decode occupancy below the zero-cost
+    # admission ideal — the honesty the satellite fix is about
+    assert stats["mean_occupancy"] < plan_mod.predicted_occupancy(
+        B, wave=W, gen_lens=lens)
+
+
+def test_predicted_occupancy_prefill_rounds():
+    """Unit pins for the prefill-aware occupancy model."""
+    # zero prefill rounds: unchanged historical behavior
+    assert plan_mod.predicted_occupancy(8, wave=4) == pytest.approx(4.0)
+    assert plan_mod.prefill_rounds(8, 3) == 3
+    assert plan_mod.prefill_rounds(8, 0) == 0
+    # uniform lens with prefill rounds need max_new_tokens
+    with pytest.raises(AssertionError):
+        plan_mod.predicted_occupancy(8, wave=4, prefill_rounds=2)
+    # work bound: 8 requests x (4 decode + 2 prefill) rounds over 4
+    # slots -> 12 rounds, occupancy 48/12
+    occ = plan_mod.predicted_occupancy(8, wave=4, prefill_rounds=2,
+                                       max_new_tokens=4)
+    assert occ == pytest.approx(48 / 12)
+    # chain bound: one long request dominates
+    occ = plan_mod.predicted_occupancy(2, wave=4, gen_lens=[10, 1],
+                                       prefill_rounds=3)
+    assert occ == pytest.approx((10 + 1 + 6) / 13)
+    # per-request prefill rounds: the chain bound must track the worst
+    # (len + rounds) pair, not the mean — a short-prompt long-gen
+    # request finishing in 11 rounds yields busy 17/11, and the bound
+    # covers it (the scalar-mean form would not)
+    occ = plan_mod.predicted_occupancy(2, wave=4, gen_lens=[10, 1],
+                                       prefill_rounds=[1, 5])
+    assert occ == pytest.approx(17 / 11)
+
+
+def test_costmodel_gen_prefill_chunk():
+    """The mixed-round prefill price is positive for GEN, zero for other
+    tasks, and scales with the chunk width."""
+    from repro.core.costmodel import CostModel
+    from repro.core import topology, workflow
+    from repro.core.enumerate import build_plan
+    topo = topology.build_host(2)
+    wf = workflow.make_grpo(workflow.QWEN_1_7B, global_batch=64)
+    plan = build_plan(topo, wf, (tuple(range(wf.n_tasks)),), [2], [0, 1])
+    cm = CostModel(topo, wf)
+    gen_t = 0
+    c16 = cm.gen_prefill_chunk(plan, gen_t, chunk=16)
+    c64 = cm.gen_prefill_chunk(plan, gen_t, chunk=64)
+    assert 0 < c16 < c64
+    train_t = wf.n_tasks - 1
+    assert cm.gen_prefill_chunk(plan, train_t, chunk=16) == 0.0
+
+
 def test_cache_gather_scatter_roundtrip():
     """[R, B, ...] cache rows move wholesale: scatter(src at mask) then
     gather returns src rows exactly; unmasked rows untouched."""
@@ -312,6 +479,31 @@ def test_adapter_fast_path_stats(setup):
     ref = rollout.generate(params, cfg, prompts, jax.random.PRNGKey(7),
                            sampler)
     assert_rollout_equal(ref, ro)
+
+
+def test_engine_gen_executor_chunked_prefill_parity():
+    """TaskKind.GEN with chunked admission: the engine's measured-vs-
+    predicted occupancy covers prefill rounds (busy accounting on the
+    measured side, prefill_rounds on the prediction side) instead of
+    assuming admission free."""
+    cfg = tiny_cfg()
+    task = AdditionTask(max_operand=9)
+    rl = RLConfig(algorithm="grpo", n_rollouts=4, max_new_tokens=4,
+                  gen_engine="genserve", decode_chunk=2, prefill_chunk=2)
+    trainer = RLTrainer(cfg, rl, task, KEY)
+    rng = np.random.default_rng(0)
+    prompts, answers = task.sample_batch(rng, 3)
+    m = trainer.iteration(prompts, answers, jax.random.PRNGKey(7))
+    assert m["gen_prefill_rounds"] >= 1
+    assert 0 < m["gen_busy_occupancy"] <= m["gen_wave"]
+    summary = trainer.engine.wave_occupancy_summary()
+    assert summary["measured_occupancy"] > 0
+    assert summary["predicted_occupancy"] > 0
+    # prediction charges admission: never above the free-admission ideal
+    # (equal exactly when batch == wave — every slot busy throughout)
+    free = plan_mod.predicted_occupancy(12, wave=m["gen_wave"])
+    assert summary["predicted_occupancy"] <= free
+    assert np.isfinite(summary["ratio"])
 
 
 def test_engine_gen_executor_emits_wave_events():

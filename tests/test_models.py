@@ -204,6 +204,68 @@ def test_write_kv_per_row_positions():
                                           np.asarray(cv_i[0]))
 
 
+@pytest.mark.parametrize("window", [None, 4])
+def test_write_kv_chunk_at_per_row_positions(window):
+    """Chunked write_kv (Sq > 1): a C-token chunk at per-row start
+    positions equals C sequential single-token writes — including ring
+    wraparound within a chunk and a partial validity mask."""
+    B, L, C, KV, hd = 3, 4, 6, 1, 2
+    ks = jax.random.split(KEY, 2)
+    k_new = jax.random.normal(ks[0], (B, C, KV, hd))
+    v_new = jax.random.normal(ks[1], (B, C, KV, hd))
+    pos = np.array([0, 3, 5])
+    n_valid = np.array([6, 4, 2])
+    valid = jnp.asarray(np.arange(C)[None] < n_valid[:, None])
+    ck = jax.random.normal(jax.random.PRNGKey(9), (B, L, KV, hd))
+    cv = jax.random.normal(jax.random.PRNGKey(10), (B, L, KV, hd))
+    got_k, got_v = cache_mod.write_kv(ck, cv, k_new, v_new,
+                                      jnp.asarray(pos), window, valid=valid)
+    # reference: token-by-token writes per row (ring: sequential, last
+    # wins; full cache: first past-the-end token holds the final slot —
+    # the keep-first-L prefill truncation)
+    want_k, want_v = np.array(ck), np.array(cv)
+    for b in range(B):
+        wrote_end = False
+        for j in range(int(n_valid[b])):
+            p = int(pos[b]) + j
+            if window is not None:
+                slot = p % L
+            else:
+                slot = min(p, L - 1)
+                if p >= L - 1:
+                    if wrote_end:
+                        continue
+                    wrote_end = True
+            want_k[b, slot] = np.asarray(k_new[b, j])
+            want_v[b, slot] = np.asarray(v_new[b, j])
+    np.testing.assert_array_equal(np.asarray(got_k), want_k)
+    np.testing.assert_array_equal(np.asarray(got_v), want_v)
+
+
+def test_prefill_kv_is_write_kv_chunk():
+    """The one-shot prefill layout is the position-0 chunk write: full
+    caches keep the first L tokens, ring caches the last L."""
+    B, S, KV, hd = 2, 7, 1, 2
+    k = jax.random.normal(KEY, (B, S, KV, hd))
+    v = jax.random.normal(jax.random.PRNGKey(5), (B, S, KV, hd))
+    for window, L in ((None, 5), (4, 4), (None, 9)):
+        ck, cv = cache_mod.prefill_kv(jnp.zeros((B, L, KV, hd)),
+                                      jnp.zeros((B, L, KV, hd)), k, v,
+                                      window)
+        if window is None:
+            n = min(S, L)
+            np.testing.assert_array_equal(np.asarray(ck[:, :n]),
+                                          np.asarray(k[:, :n]))
+            np.testing.assert_array_equal(np.asarray(cv[:, :n]),
+                                          np.asarray(v[:, :n]))
+        else:
+            for p in range(max(S - L, 0), S):
+                np.testing.assert_array_equal(np.asarray(ck[:, p % L]),
+                                              np.asarray(k[:, p]))
+                np.testing.assert_array_equal(np.asarray(cv[:, p % L]),
+                                              np.asarray(v[:, p]))
+
+
 @pytest.mark.parametrize("window,cap,KV", [
     (None, None, 2), (4, None, 2), (None, 30.0, 1), (6, 20.0, 4),
 ])
