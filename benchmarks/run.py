@@ -66,7 +66,8 @@ def main() -> None:
         ("elastic_redeploy", "§6 throughput recovery vs degraded incumbent",
          elastic_redeploy.run),
         ("genserve_throughput",
-         "continuous batching vs single-wave decode; chunked admission",
+         "continuous batching vs single-wave decode; chunked admission; "
+         "paged KV + prefix reuse",
          genserve_throughput.run),
         ("fig3_e2e", "Figure 3: end-to-end throughput", fig3_e2e.run),
         ("fig4_loadbalance", "Figure 4: LB ablation", fig4_loadbalance.run),

@@ -241,7 +241,8 @@ class CostModel:
         return decode_wave(nm * mbs)
 
     def gen_prefill_chunk(self, plan: Plan, t: int, i: int = 0,
-                          j: int = 0, chunk: Optional[int] = None) -> float:
+                          j: int = 0, chunk: Optional[int] = None,
+                          prefix_hit_rate: float = 0.0) -> float:
         """Price of the prefill half of one *mixed wave-step* round for
         GEN replica i, stage j: a fixed-shape ``[W, C]`` prompt chunk
         through the stage's layers (chunked admission never stalls the
@@ -255,10 +256,19 @@ class CostModel:
         decode half's roofline.  Total prompt ingestion cost of a
         request is ``ceil(P / C)`` of these rounds, which is what
         ``plan.predicted_occupancy(prefill_rounds=...)`` charges slots
-        for."""
+        for.
+
+        ``prefix_hit_rate`` prices paged prefix-cache admission: the
+        expected fraction of prompt tokens found cached never runs a
+        prefill chunk, so the *amortized* per-round price scales by
+        ``(1 - h)`` — the per-request round count shrinks by the same
+        factor in :func:`repro.core.plan.prefill_rounds`, and scaling
+        here keeps single-round comparisons (benchmark Fig-7 axes)
+        honest without re-deriving the round count."""
         task = self.wf.task(t)
         if task.kind != TaskKind.GEN:
             return 0.0
+        h = min(max(float(prefix_hit_rate), 0.0), 1.0)
         C = int(chunk) if chunk else PREFILL_CHUNK
         dp, pp, tp = plan.parallel[t]
         nl = plan.stage_layers(self.wf, t, j)
@@ -281,7 +291,7 @@ class CostModel:
                 / (self.topo.hbm(d) * tp)
             kv = dbs * nl * kv_tok * kv_len / (self.topo.hbm(d) * tp)
             worst = max(worst, comp + weights + kv)
-        return worst
+        return worst * (1.0 - h)
 
     def gen_wave_occupancy(self, plan: Plan, t: int) -> float:
         """Predicted mean decode-slot occupancy for GEN task t,

@@ -38,20 +38,30 @@ def decode_wave(local_batch: float) -> int:
     return max(min(int(local_batch), MAX_DECODE_WAVE), 1)
 
 
-def prefill_rounds(prompt_len: int, prefill_chunk: int) -> int:
+def prefill_rounds(prompt_len: int, prefill_chunk: int,
+                   prefix_hit_rate: float = 0.0) -> int:
     """Mixed wave-step rounds a request's prompt ingestion occupies a
     decode slot for under chunked admission (0 = one-shot admission,
-    which the occupancy model prices as free)."""
+    which the occupancy model prices as free).
+
+    ``prefix_hit_rate`` is the expected fraction of prompt tokens served
+    from the paged prefix cache (genserve ``prefix_cache=True``): only
+    the uncached suffix is prefilled, floored at one round — even a
+    fully cached prompt runs its landing chunk (the hit is capped at
+    plen-1 so first-token logits come from a real forward pass)."""
     if prefill_chunk <= 0:
         return 0
-    return math.ceil(max(int(prompt_len), 1) / int(prefill_chunk))
+    h = min(max(float(prefix_hit_rate), 0.0), 1.0)
+    suffix = max(int(prompt_len), 1) * (1.0 - h)
+    return max(math.ceil(suffix / int(prefill_chunk)), 1)
 
 
 def predicted_occupancy(n_requests: float,
                         wave: Optional[int] = None,
                         gen_lens: Optional[Sequence[int]] = None,
                         prefill_rounds: float = 0.0,
-                        max_new_tokens: Optional[int] = None) -> float:
+                        max_new_tokens: Optional[int] = None,
+                        prefix_hit_rate: float = 0.0) -> float:
     """Predicted mean decode-slot occupancy under continuous batching.
 
     This is the occupancy the cost model's ``C_hbm`` wave term assumes
@@ -74,7 +84,12 @@ def predicted_occupancy(n_requests: float,
     a sequence gives per-request rounds (aligned with ``gen_lens`` —
     required for the chain bound to stay a true upper bound under
     heterogeneous prompt lengths).  Uniform lengths then need
-    ``max_new_tokens`` (the per-request decode length)."""
+    ``max_new_tokens`` (the per-request decode length).
+
+    ``prefix_hit_rate`` scales the admission price for paged
+    prefix-cache serving: each request's prefill rounds shrink to the
+    expected uncached fraction ``(1 - h)``, floored at one round per
+    admitted request (the landing chunk always runs)."""
     W = wave if wave is not None else MAX_DECODE_WAVE
     W = max(int(W), 1)
     n = max(float(n_requests), 1.0)
@@ -95,6 +110,9 @@ def predicted_occupancy(n_requests: float,
         cs = [max(float(c), 0.0) for c in prefill_rounds]
         assert len(cs) == len(lens), \
             "per-request prefill_rounds must align with gen_lens"
+    h = min(max(float(prefix_hit_rate), 0.0), 1.0)
+    if h > 0.0:
+        cs = [max(c * (1.0 - h), 1.0) if c > 0.0 else 0.0 for c in cs]
     total = sum(lens) + sum(cs)
     chain = max(l + c for l, c in zip(lens, cs))
     steps = max(chain, math.ceil(total / W))
@@ -139,6 +157,19 @@ class Plan:
 
     def devices_of_stage(self, t: int, i: int, j: int) -> np.ndarray:
         return self.assignment[t][i, j]
+
+    def max_device(self) -> int:
+        """Largest device id any tasklet is assigned to (-1 if none)."""
+        ids = [int(a.max()) for a in self.assignment.values() if a.size]
+        return max(ids, default=-1)
+
+    def fits_topology(self, topo) -> bool:
+        """Whether every assigned device id exists in ``topo`` — false
+        after a device drop re-indexed the survivors under an incumbent
+        plan that still references the old ids (the no-feasible-
+        challenger elastic case); simulating such a pair would index
+        past the device list."""
+        return self.max_device() < topo.n
 
     def task_grouping_key(self) -> Tuple[Tuple[int, ...], ...]:
         return tuple(sorted(g.tasks for g in self.groups))

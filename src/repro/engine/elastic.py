@@ -96,7 +96,11 @@ class ElasticController:
                 carry_pending=cfg.carry_pending)
         else:
             # stay on the incumbent, but predictions must price the
-            # drifted environment
+            # drifted environment; when the incumbent no longer fits the
+            # drifted device list (no feasible challenger after a drop)
+            # the engine keeps the old topology and flags
+            # ``topology_stale`` instead of adopting an inconsistent
+            # (plan, topo) pair that would crash prediction
             trainer.engine.update_topology(topo)
         rec = AdaptRecord(iteration, decision, decision.switch,
                           trainer.engine.epoch, resched_s,

@@ -83,6 +83,10 @@ class Engine:
         self.pipeline = AsyncPipeline(asynchronous)
         self.ctx = self._make_context(plan, topo, epoch=0, start_iter=0)
         self.ctx_history: List[PlanContext] = []   # retired epochs, oldest first
+        # set when a topology drift could not be adopted because the
+        # incumbent plan references dropped devices (predictions keep
+        # pricing the old environment until a feasible plan lands)
+        self.topology_stale = False
         self._done_at: Dict[tuple, float] = {}
         self._sync_done = 0.0
         self._iter = 0
@@ -151,7 +155,21 @@ class Engine:
     def update_topology(self, topo: Topology) -> None:
         """Adopt a drifted topology *without* swapping plans (the elastic
         controller stays on the incumbent): predictions now price the new
-        environment; no epoch bump, no migration, no placement rebuild."""
+        environment; no epoch bump, no migration, no placement rebuild.
+
+        If the incumbent plan no longer fits the drifted topology (a
+        device drop re-indexed the survivors and ``reschedule`` found no
+        feasible challenger), the old topology is kept for prediction —
+        simulating the incumbent on the shrunken device list would index
+        out of range — and the epoch is marked unpredictable
+        (``topology_stale``): ``epoch_report`` rows show it explicitly
+        instead of crashing, and ``compare_with_simulator`` keeps
+        pricing the environment the plan actually describes."""
+        if self.ctx.plan is not None and topo is not None \
+                and not self.ctx.plan.fits_topology(topo):
+            self.topology_stale = True
+            return
+        self.topology_stale = False
         self.ctx = dataclasses.replace(self.ctx, topo=topo)
 
     def apply_plan(self, plan: Plan, *, topo: Optional[Topology] = None,
@@ -203,6 +221,7 @@ class Engine:
             dropped = int(self.pipeline.drain() is not None)
         self.ctx_history.append(old)
         self.ctx = ctx
+        self.topology_stale = False    # the new plan fits its topology
         return {"transition_cost_s": trans_s, "epoch": float(new_epoch),
                 "migration_start_s": t0, "migration_end_s": t1,
                 "dropped_bundles": float(dropped)}
@@ -458,7 +477,7 @@ class Engine:
             if len(starts) >= 2:
                 measured = starts[-1] - starts[-2]
             predicted = float("nan")
-            if ctx.topo is not None:
+            if ctx.topo is not None and ctx.plan.fits_topology(ctx.topo):
                 predicted = simulate(
                     ctx.topo, self.wf, ctx.plan,
                     n_iterations=max(len(starts), 4),

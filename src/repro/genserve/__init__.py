@@ -39,6 +39,18 @@ programs; details in ``genserve.decoder``):
            |                             |   prefill_chunk] prompt
            |                             |   chunk, all masked
   chunk    | [decode_chunk] keys         | pure decode steps under scan
+  copy     | [W] src/dst page ids        | paged only: pool page copies
+           |                             |   (COW), sentinel-padded
+
+With ``page_size > 0`` the attention KV cache is a shared page pool
+addressed through per-slot block tables (``models.cache``); the model
+programs are unchanged — they consume a gathered contiguous view and
+scatter back just the written token.  ``prefix_cache=True`` adds the
+host-side refcounted allocator + radix prefix tree
+(``genserve.pagepool``): admission matches each prompt against prompts
+already resident in the pool and skips prefill on the cached prefix
+(copy-on-write on a divergent partial page), reported as
+``prefix_hit_rate`` / ``prefill_tokens_skipped`` in the engine stats.
 
 Membership, prompt raggedness, chunk counts and landings are masks and
 scatters — the host never recompiles on admission order or prompt mix.
@@ -66,5 +78,6 @@ Invariants:
 """
 from repro.genserve.adapter import generate, wave_stats_from_mask  # noqa: F401
 from repro.genserve.decoder import GenServeConfig, serve  # noqa: F401
+from repro.genserve.pagepool import PagePool, RadixCache  # noqa: F401
 from repro.genserve.scheduler import (Request, RequestQueue,  # noqa: F401
                                       SlotTable)

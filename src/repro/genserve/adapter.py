@@ -67,7 +67,9 @@ def generate(params, cfg: ModelConfig, prompts, rng,
              fast_path: bool = True, decode_path: str = "batched",
              admission: str = "fifo", prefill_chunk: int = 0,
              prompt_lens: Optional[Sequence[int]] = None,
-             measure_ttft: bool = False
+             measure_ttft: bool = False, page_size: int = 0,
+             prefix_cache: bool = False, pool_pages: int = 0,
+             sjf_aging: int = 0
              ) -> Tuple[Dict[str, jnp.ndarray], Dict[str, object]]:
     """Continuous-batching generation with the rollout contract.
 
@@ -80,10 +82,15 @@ def generate(params, cfg: ModelConfig, prompts, rng,
     when budgets are known).  ``prefill_chunk > 0`` enables chunked
     admission (mixed wave-steps: prompts ingested ``prefill_chunk``
     tokens per round alongside decode, optional ragged ``prompt_lens``).
+    ``page_size > 0`` switches the KV cache to the paged layout and
+    ``prefix_cache=True`` adds radix prefix reuse across slots (prefill
+    skipped on cached prompt prefixes) — both imply the engine path
+    since paged admission is chunked by construction.
     """
     B = int(np.asarray(prompts).shape[0])
     W = int(wave) if wave else plan_mod.decode_wave(B)
-    if fast_path and gen_lens is None and prefill_chunk == 0 and B <= W:
+    if fast_path and gen_lens is None and prefill_chunk == 0 \
+            and page_size == 0 and B <= W:
         ro = rollout.generate(params, cfg, jnp.asarray(prompts), rng,
                               sampler)
         return ro, wave_stats_from_mask(ro["mask"], wave=min(W, B))
@@ -93,6 +100,8 @@ def generate(params, cfg: ModelConfig, prompts, rng,
                           eos_token=sampler.eos_token, greedy=sampler.greedy,
                           decode_path=decode_path, admission=admission,
                           prefill_chunk=prefill_chunk,
-                          measure_ttft=measure_ttft)
+                          measure_ttft=measure_ttft, page_size=page_size,
+                          prefix_cache=prefix_cache, pool_pages=pool_pages,
+                          sjf_aging=sjf_aging)
     return serve(params, cfg, prompts, rng, gcfg, gen_lens=gen_lens,
                  prompt_lens=prompt_lens)

@@ -55,6 +55,47 @@ masked all-idle chunk passes every round.
 ``decode_path="vmapped"`` selects the legacy W-way vmap of a B=1 decode
 for parity testing.
 
+Paged KV (``page_size > 0``, requires chunked admission): attention k/v
+live in per-layer page pools addressed through a per-slot block table
+``st["btab"]`` (``models.cache.init_paged_cache``).  Each program's
+model compute is unchanged — a gather (``cache.paged_view``) materializes
+the contiguous per-slot view the decode / prefill-chunk steps consume,
+and the freshly written token k/v are scattered back into the pools
+(``paged_update_decode`` / ``paged_update_chunk``), always emit-masked
+so a retired slot's stale block-table row can never corrupt a reused
+page.  Two more paged programs join the table:
+
+  program   inputs (beyond params/state)      what it does
+  -------   -------------------------------   ---------------------------
+  install   ... + pstarts [W], btab [W,MP]    paged variant: additionally
+                                              maps the admitted slots'
+                                              block-table rows and starts
+                                              each prefill cursor at
+                                              ``pstarts`` (after the
+                                              cached prefix).
+  copy      src [W], dst [W]                  copy-on-write page copies
+                                              (``cache.copy_pages``) the
+                                              host schedules when an
+                                              admission diverges mid-page
+                                              from a cached prefix;
+                                              sentinel-padded, fixed
+                                              shape.
+
+With ``prefix_cache=True`` the host admission loop additionally runs a
+radix prefix tree + refcounted page allocator
+(``genserve.pagepool``): each admitted prompt is matched against the
+tree, whole matching pages are mapped copy-free (refcount++), at most
+one partially matching page is copied (COW) — and chunked prefill runs
+only on the uncached suffix (the cursor starts at the hit length,
+capped at plen-1 so the landing chunk always runs and samples from real
+landing logits).  Landed prompts insert their complete pages; retired
+slots decref; LRU leaves evict when the free list runs dry.  Sharing
+requires every layer to be full-window attention
+(``cache.supports_prefix_sharing``) — ring windows would clobber shared
+pages and recurrent state cannot be snapshotted at a prompt boundary —
+while the paged *layout* itself (with the identity block table) works
+for every config and is the exact-parity no-sharing fallback.
+
 The host loop owns dynamic membership: it reads back the ``occupied``
 vector after every round, retires finished requests via the
 ``scheduler.SlotTable``, back-fills freed slots from the admission
@@ -82,7 +123,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.genserve.scheduler import Request, RequestQueue, SlotTable
+from repro.genserve.pagepool import PagePool, RadixCache
+from repro.genserve.scheduler import FREE, Request, RequestQueue, SlotTable
 from repro.models import attention as attn_mod
 from repro.models import cache as cache_mod
 from repro.models import sampling
@@ -109,6 +151,19 @@ class GenServeConfig:
     #                                  per admit batch; chunked stamps ride
     #                                  the round sync for free, but are
     #                                  gated too so the flag means one thing)
+    page_size: int = 0               # paged KV: tokens per pool page
+    #                                  (0 = contiguous per-slot cache)
+    prefix_cache: bool = False       # radix prefix reuse across slots
+    #                                  (requires page_size > 0 and a
+    #                                  full-attention config)
+    pool_pages: int = 0              # page-pool size override (0 = sized
+    #                                  automatically: W*MP contiguous-
+    #                                  equivalent, 2*W*MP with prefix
+    #                                  cache so eviction can always make
+    #                                  room for a full admission wave)
+    sjf_aging: int = 0               # sjf anti-starvation: admit a
+    #                                  passed-over request after at most
+    #                                  this many pops (0 = pure sjf)
 
     def validate(self) -> None:
         assert self.wave >= 1 and self.max_new_tokens >= 1
@@ -116,6 +171,16 @@ class GenServeConfig:
         assert self.decode_path in ("batched", "vmapped")
         assert self.admission in ("fifo", "sjf")
         assert self.prefill_chunk >= 0
+        assert self.page_size >= 0 and self.pool_pages >= 0
+        assert self.sjf_aging >= 0
+        if self.page_size > 0:
+            # paged KV rides the chunked-admission machinery (per-slot
+            # cursors, install/mixed programs)
+            assert self.prefill_chunk > 0, \
+                "page_size > 0 requires chunked admission (prefill_chunk > 0)"
+        if self.prefix_cache:
+            assert self.page_size > 0, \
+                "prefix_cache requires a paged cache (page_size > 0)"
 
 
 # ---------------------------------------------------------------------------
@@ -165,6 +230,21 @@ def _build_fns(cfg: ModelConfig, gcfg: GenServeConfig, prompt_len: int,
     N = gcfg.max_new_tokens
     eos = gcfg.eos_token
     dummy_row = n_reqs               # output buffers carry a scratch row
+    ps = gcfg.page_size
+    paged = ps > 0
+    max_seq = prompt_len + N
+    # without prefix sharing the block table is the identity mapping
+    # forever (install always writes identity rows), so the pool view is
+    # a pure reshape — no gather, ~zero overhead over contiguous
+    identity_pool = (paged and not gcfg.prefix_cache
+                     and gcfg.pool_pages == 0)
+
+    def view_of(st):
+        """Contiguous per-slot blocks view the model steps consume."""
+        if not paged:
+            return st["cache"]
+        return cache_mod.paged_view(cfg, st["cache"], st["btab"], max_seq,
+                                    page_size=ps, identity=identity_pool)
 
     def sample(key, logits):
         return sampling.sample_tokens(key, logits,
@@ -210,9 +290,12 @@ def _build_fns(cfg: ModelConfig, gcfg: GenServeConfig, prompt_len: int,
         back — required whenever slots may be mid-prefill (the mixed
         wave-step), free to skip on the pure decode path (a free row's
         clobbered cache is replaced wholesale at one-shot re-admission,
-        or zeroed + rewritten by chunked re-admission)."""
+        or zeroed + rewritten by chunked re-admission).  Paged caches
+        scatter the token delta through the block table instead
+        (``paged_update_decode``) — inherently emit-masked, so protect
+        is moot and freed pages stay untouched."""
         logits, new_blocks = wave_decode(params, cfg, st["tok"],
-                                         st["pos"], st["cache"])
+                                         st["pos"], view_of(st))
         nxt = sample(key, logits)
         lp = sampling.token_logprobs(logits, nxt)
         emit = st["occupied"]
@@ -226,9 +309,14 @@ def _build_fns(cfg: ModelConfig, gcfg: GenServeConfig, prompt_len: int,
         st["lp"] = st["lp"].at[buf_rows, cols].set(lp)
         st["mask"] = st["mask"].at[buf_rows, cols].set(
             emit.astype(jnp.float32))
-        st["cache"] = cache_mod.scatter_slots(st["cache"], new_blocks,
-                                              emit) if protect \
-            else new_blocks
+        if paged:
+            st["cache"] = cache_mod.paged_update_decode(
+                cfg, st["cache"], new_blocks, st["btab"], st["pos"],
+                emit, max_seq, page_size=ps)
+        else:
+            st["cache"] = cache_mod.scatter_slots(st["cache"], new_blocks,
+                                                  emit) if protect \
+                else new_blocks
         st["pos"] = jnp.where(emit, st["pos"] + 1, st["pos"])
         st["tok"] = jnp.where(emit, nxt, st["tok"])
         st["ngen"] = jnp.where(emit, st["ngen"] + 1, st["ngen"])
@@ -241,21 +329,41 @@ def _build_fns(cfg: ModelConfig, gcfg: GenServeConfig, prompt_len: int,
             lambda st, key: decode_substep(params, st, key, protect=False),
             state, keys)
 
-    def install(state, prompts, admit_mask, rows, limits, plens):
+    def install(state, prompts, admit_mask, rows, limits, plens,
+                pstarts=None, btab_new=None):
         """Chunked admission: stage request metadata into the admitted
         slots and zero their cache rows — no model compute; the prompt
-        is ingested chunk by chunk by subsequent ``mixed`` rounds."""
+        is ingested chunk by chunk by subsequent ``mixed`` rounds.
+        Paged: additionally merge the admitted slots' block-table rows,
+        start each prefill cursor at ``pstarts`` (after the prefix the
+        host found cached) and zero only the per-slot leaves — pool
+        pages may be shared with live slots and stale page contents are
+        masked by position validity anyway."""
         st = dict(state)
         st["prompt"] = jnp.where(admit_mask[:, None], prompts,
                                  state["prompt"])
-        st["pcur"] = jnp.where(admit_mask, 0, state["pcur"])
         st["plen"] = jnp.where(admit_mask, plens, state["plen"])
         st["prefilling"] = state["prefilling"] | admit_mask
         st["req"] = jnp.where(admit_mask, rows, state["req"])
         st["limit"] = jnp.where(admit_mask, limits, state["limit"])
         st["ngen"] = jnp.where(admit_mask, 0, state["ngen"])
         st["occupied"] = state["occupied"] & ~admit_mask
-        st["cache"] = cache_mod.zero_slots(state["cache"], admit_mask)
+        if paged:
+            st["pcur"] = jnp.where(admit_mask, pstarts, state["pcur"])
+            st["btab"] = jnp.where(admit_mask[:, None], btab_new,
+                                   state["btab"])
+            st["cache"] = cache_mod.zero_paged_slots(cfg, state["cache"],
+                                                     admit_mask)
+        else:
+            st["pcur"] = jnp.where(admit_mask, 0, state["pcur"])
+            st["cache"] = cache_mod.zero_slots(state["cache"], admit_mask)
+        return st
+
+    def copy(state, src, dst):
+        """COW page copies (paged only): pool[dst] = pool[src] in every
+        attention layer; sentinel-padded entries are dropped."""
+        st = dict(state)
+        st["cache"] = cache_mod.copy_pages(cfg, state["cache"], src, dst)
         return st
 
     C = max(gcfg.prefill_chunk, 1)
@@ -272,11 +380,16 @@ def _build_fns(cfg: ModelConfig, gcfg: GenServeConfig, prompt_len: int,
                        st["prompt"].shape[1] - 1)
         chunk_tok = jnp.take_along_axis(st["prompt"], idx, axis=1)
         last_logits, pf_cache = T.prefill_chunk_step(
-            params, cfg, chunk_tok, {"blocks": st["cache"], "pos": pcur},
+            params, cfg, chunk_tok, {"blocks": view_of(st), "pos": pcur},
             n_valid=n_valid)
         prow = n_valid > 0
-        cache_p = cache_mod.scatter_slots(st["cache"], pf_cache["blocks"],
-                                          prow)
+        if paged:
+            cache_p = cache_mod.paged_update_chunk(
+                cfg, st["cache"], pf_cache["blocks"], st["btab"], pcur,
+                n_valid, C, max_seq, page_size=ps)
+        else:
+            cache_p = cache_mod.scatter_slots(st["cache"],
+                                              pf_cache["blocks"], prow)
 
         land = pf & (pcur + n_valid >= st["plen"])
         tok0 = sample(k_land, last_logits)
@@ -326,14 +439,48 @@ def _build_fns(cfg: ModelConfig, gcfg: GenServeConfig, prompt_len: int,
             sub, dict(state), (k_decodes, k_lands))
         return st, (d_counts, p_counts)
 
-    return jax.jit(admit), jax.jit(chunk), jax.jit(install), jax.jit(mixed)
+    return (jax.jit(admit), jax.jit(chunk), jax.jit(install),
+            jax.jit(mixed), jax.jit(copy))
+
+
+def _pool_pages(cfg: ModelConfig, gcfg: GenServeConfig,
+                prompt_len: int) -> Tuple[int, int]:
+    """(max pages per slot, pool size) for a paged engine config.
+
+    Default pool: ``W*MP`` without prefix caching (exactly the
+    contiguous footprint — the identity block table fills it), ``2*W*MP``
+    with it, which guarantees a full admission wave can always be
+    satisfied after LRU eviction: live slots pin at most ``W*MP``
+    distinct pages, so at least ``W*MP`` are free or tree-only."""
+    MP = cache_mod.max_pages_per_slot(cfg, prompt_len + gcfg.max_new_tokens,
+                                      gcfg.page_size)
+    if gcfg.pool_pages > 0:
+        NP = gcfg.pool_pages
+    else:
+        NP = gcfg.wave * MP * (2 if gcfg.prefix_cache else 1)
+    return MP, NP
 
 
 def _init_state(cfg: ModelConfig, gcfg: GenServeConfig, prompt_len: int,
                 n_reqs: int) -> Dict[str, object]:
     W, N = gcfg.wave, gcfg.max_new_tokens
-    cache = cache_mod.init_cache(cfg, W, prompt_len + N,
-                                 dtype=jnp.dtype(cfg.dtype))
+    if gcfg.page_size > 0:
+        MP, NP = _pool_pages(cfg, gcfg, prompt_len)
+        cache = cache_mod.init_paged_cache(cfg, W, prompt_len + N,
+                                           page_size=gcfg.page_size,
+                                           n_pages=NP,
+                                           dtype=jnp.dtype(cfg.dtype))
+        # without prefix sharing the block table is the static identity
+        # map (pool == reshaped contiguous layout); with sharing the
+        # host assigns rows at admission, so start fully unmapped
+        if gcfg.prefix_cache:
+            btab = jnp.full((W, MP), NP, jnp.int32)
+        else:
+            btab = jnp.asarray(cache_mod.identity_block_table(W, MP))
+    else:
+        cache = cache_mod.init_cache(cfg, W, prompt_len + N,
+                                     dtype=jnp.dtype(cfg.dtype))
+        btab = None
     st = {
         "tok": jnp.zeros((W,), jnp.int32),
         "pos": jnp.zeros((W,), jnp.int32),
@@ -357,6 +504,8 @@ def _init_state(cfg: ModelConfig, gcfg: GenServeConfig, prompt_len: int,
             "plen": jnp.full((W,), prompt_len, jnp.int32),
             "prefilling": jnp.zeros((W,), bool),
         })
+    if btab is not None:
+        st["btab"] = btab
     return st
 
 
@@ -396,12 +545,30 @@ def serve(params, cfg: ModelConfig, prompts, rng, gcfg: GenServeConfig,
     limits = np.full((B,), N, np.int64) if gen_lens is None \
         else np.clip(np.asarray(gen_lens, np.int64), 1, N)
     queue = RequestQueue([Request(i, int(limits[i])) for i in range(B)],
-                         policy=gcfg.admission)
+                         policy=gcfg.admission, aging=gcfg.sjf_aging)
     table = SlotTable(W)
+    ps = gcfg.page_size
+    paged = ps > 0
+    sharing = gcfg.prefix_cache
+    if sharing:
+        assert cache_mod.supports_prefix_sharing(cfg), (
+            "prefix_cache requires every layer to be full-window "
+            "attention: ring windows would clobber shared pages and "
+            "recurrent state cannot be snapshotted at a prompt boundary "
+            "(use page_size without prefix_cache for those configs)")
+    if paged:
+        MP, NP = _pool_pages(cfg, gcfg, P)
+        identity_rows = cache_mod.identity_block_table(W, MP)
+    pool = radix = None
+    if sharing:
+        pool = PagePool(NP, ps)
+        radix = RadixCache(pool)
+        slot_pages: List[List[int]] = [[] for _ in range(W)]
+        slot_tokens: Dict[int, List[int]] = {}
     # measure_ttft is host-only — strip it from the program cache key so
     # flipping instrumentation never recompiles the device programs
     fns_cfg = dataclasses.replace(gcfg, measure_ttft=False)
-    admit_fn, chunk_fn, install_fn, mixed_fn = _build_fns(
+    admit_fn, chunk_fn, install_fn, mixed_fn, copy_fn = _build_fns(
         cfg, fns_cfg, P, B, attn_mod.get_attention_impl())
     state = _init_state(cfg, fns_cfg, P, B)
 
@@ -448,9 +615,64 @@ def serve(params, cfg: ModelConfig, prompts, rng, gcfg: GenServeConfig,
                 lim[s] = rq.max_new_tokens
                 pl[s] = plens_np[rq.rid]
             if chunked:
-                state = install_fn(state, pb, admit_mask, rows, lim, pl)
-                for s, rq in zip(slots, reqs):
-                    prefill_left[s] = -(-int(plens_np[rq.rid]) // C)
+                pstarts = np.zeros((W,), np.int32)
+                btab_new = None
+                if paged:
+                    btab_new = np.full((W, MP), NP, np.int32)
+                if sharing:
+                    copy_src: List[int] = []
+                    copy_dst: List[int] = []
+                    cow_srcs: List[int] = []
+                    for s, rq in zip(slots, reqs):
+                        p = int(plens_np[rq.rid])
+                        toks = prompts_np[rq.rid, :p].tolist()
+                        # cap the hit at p-1 tokens: the landing chunk
+                        # must always run so first-token logits come
+                        # from a real forward pass
+                        full, part = radix.match(toks, p - 1)
+                        pool.incref(full)          # the slot's refs
+                        if part is not None:
+                            # keep the COW source alive across eviction
+                            # until its copy is scheduled
+                            pool.incref([part[0]])
+                            cow_srcs.append(part[0])
+                        need = MP - len(full)
+                        if pool.available() < need:
+                            radix.evict(need - pool.available())
+                        fresh = pool.alloc(need)
+                        assert fresh is not None, "page pool exhausted"
+                        row = full + fresh
+                        btab_new[s, :len(row)] = row
+                        pstart = len(full) * ps
+                        if part is not None:
+                            copy_src.append(part[0])
+                            copy_dst.append(fresh[0])
+                            pstart += part[1]
+                        pstarts[s] = pstart
+                        slot_pages[s] = row
+                        slot_tokens[s] = toks
+                        table.record_prefix(pstart, p)
+                        prefill_left[s] = -(-(p - pstart) // C)
+                    if copy_src:
+                        src = np.full((W,), NP, np.int32)
+                        dst = np.full((W,), NP, np.int32)
+                        src[:len(copy_src)] = copy_src
+                        dst[:len(copy_dst)] = copy_dst
+                        state = copy_fn(state, src, dst)
+                    if cow_srcs:
+                        pool.decref(cow_srcs)
+                else:
+                    for s, rq in zip(slots, reqs):
+                        p = int(plens_np[rq.rid])
+                        if paged:
+                            btab_new[s] = identity_rows[s]
+                        table.record_prefix(0, p)
+                        prefill_left[s] = -(-p // C)
+                if paged:
+                    state = install_fn(state, pb, admit_mask, rows, lim,
+                                       pl, pstarts, jnp.asarray(btab_new))
+                else:
+                    state = install_fn(state, pb, admit_mask, rows, lim, pl)
             else:
                 key = rngs[0] if next_key == 0 \
                     else jax.random.fold_in(side_admit, round_idx)
@@ -524,12 +746,21 @@ def serve(params, cfg: ModelConfig, prompts, rng, gcfg: GenServeConfig,
             counts = np.asarray(d)
             table.record_round(counts, np.asarray(p))
             occupied = np.asarray(state["occupied"])
+            landed = (prefill_left > 0) & (prefill_left <= k_len)
             if gcfg.measure_ttft:
                 # free here: the occupied read above already synced
                 now = time.monotonic()
-                landed = (prefill_left > 0) & (prefill_left <= k_len)
                 for s in np.nonzero(landed)[0]:
                     ttft[table.slot_req[s]] = now - t_start
+            if sharing:
+                # a landed prompt's complete pages enter the radix tree
+                # (insert-at-landing: earlier rounds' matches can never
+                # map pages whose KV has not been written yet).  The
+                # trailing partial page stays private — decode tokens
+                # share it with the prompt tail.
+                for s in np.nonzero(landed)[0]:
+                    toks = slot_tokens[s]
+                    radix.insert(toks, slot_pages[s][:len(toks) // ps])
             prefill_left = np.maximum(prefill_left - k_len, 0)
         elif occupied.any() or may_live:
             # decode only when a slot can be occupied: requests that
@@ -544,7 +775,17 @@ def serve(params, cfg: ModelConfig, prompts, rng, gcfg: GenServeConfig,
             table.record_step(counts)
             occupied = np.asarray(state["occupied"])
 
+        if sharing:
+            prev_slot_req = list(table.slot_req)
         table.retire_finished(occupied | (prefill_left > 0))
+        if sharing:
+            # retired slots drop their page references; pages shared
+            # with the radix tree or other slots survive the decref
+            for s in range(W):
+                if prev_slot_req[s] != FREE and table.slot_req[s] == FREE:
+                    pool.decref(slot_pages[s])
+                    slot_pages[s] = []
+                    slot_tokens.pop(s, None)
         t1 = time.monotonic()
         occ = float(np.mean(counts)) if len(counts) else 0.0
         rounds.append((t0, t1, occ, admitted))
@@ -572,5 +813,13 @@ def serve(params, cfg: ModelConfig, prompts, rng, gcfg: GenServeConfig,
                  float(np.mean(np.ceil(plens_np / C))) if chunked else 0.0,
              "ttft": ttft,
              "rounds": rounds, "prefills": n_prefills,
-             "admitted": table.admitted, "retired": table.retired}
+             "admitted": table.admitted, "retired": table.retired,
+             "page_size": ps, "prefix_cache": sharing,
+             "prefix_hit_rate": table.prefix_hit_rate(),
+             "prefill_tokens_skipped": table.prefix_hit_tokens,
+             "prompt_tokens": table.prompt_tokens}
+    if sharing:
+        # debug/test handles (host-side structures, no device state)
+        stats["_pagepool"] = pool
+        stats["_radix"] = radix
     return res, stats

@@ -17,6 +17,15 @@ explicit zero-decode entries, not missing ones) and the busy occupancy
 (``busy_occupancy`` — decode or prefill work per round) honest against
 ``core.plan.predicted_occupancy``.
 
+Paged prefix-cache admission (``decoder`` with ``prefix_cache=True``)
+adds one more accounting stream: at each admission the decoder matches
+the prompt against the radix tree (``genserve.pagepool.RadixCache``),
+maps the shared pages into the slot's block table and starts the
+prefill cursor *after* the cached prefix — the table records the
+skipped tokens via ``record_prefix`` and reports the token
+``prefix_hit_rate()`` alongside occupancy, so the benchmark and
+``launch/serve.py`` can show how much prefill the cache elided.
+
 Invariants (asserted):
   * a slot is FREE or holds exactly one in-flight request;
   * a request is admitted at most once (FIFO order from the queue);
@@ -27,8 +36,7 @@ Invariants (asserted):
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
-from typing import Deque, List, Sequence
+from typing import List, Sequence
 
 import numpy as np
 
@@ -51,23 +59,51 @@ class RequestQueue:
     * ``"sjf"``  — shortest-job-first by ``max_new_tokens``, arrival
       order breaking ties (stable), for when budgets are known upfront
       (the ROADMAP non-FIFO admission follow-on).
+
+    ``aging`` (sjf only) bounds starvation: every ``pop`` a passed-over
+    request accrues one skip, and once a request has been skipped
+    ``aging`` times it jumps ahead of every shorter newcomer (starved
+    requests drain in arrival order).  ``aging=0`` (default) disables
+    the knob and reproduces the pure static shortest-first order.
     """
 
-    def __init__(self, requests: Sequence[Request], policy: str = "fifo"):
+    def __init__(self, requests: Sequence[Request], policy: str = "fifo",
+                 aging: int = 0):
         assert policy in ("fifo", "sjf"), policy
+        assert aging >= 0
         self.policy = policy
+        self.aging = aging
+        # [arrival order, skip count, request] per pending request, kept
+        # in the static policy order (sjf: shortest-first, stable)
+        self._pending: List[List] = [[i, 0, r]
+                                     for i, r in enumerate(requests)]
         if policy == "sjf":
-            requests = sorted(
-                enumerate(requests),
-                key=lambda ir: (ir[1].max_new_tokens, ir[0]))
-            requests = [r for _, r in requests]
-        self._q: Deque[Request] = deque(requests)
+            self._pending.sort(key=lambda e: (e[2].max_new_tokens, e[0]))
 
     def __len__(self) -> int:
-        return len(self._q)
+        return len(self._pending)
 
     def pop(self, n: int) -> List[Request]:
-        return [self._q.popleft() for _ in range(min(n, len(self._q)))]
+        n = min(n, len(self._pending))
+        if n == 0:
+            return []
+        if self.policy == "sjf" and self.aging > 0:
+            # starved requests (skips >= aging) first, in arrival order;
+            # the rest keep shortest-first order.  Selection is dynamic
+            # so a request's skip count can promote it between pops.
+            starved = sorted((e for e in self._pending
+                              if e[1] >= self.aging), key=lambda e: e[0])
+            rest = [e for e in self._pending if e[1] < self.aging]
+            order = starved + rest
+            take = order[:n]
+            for e in order[n:]:
+                e[1] += 1
+            taken = {id(e) for e in take}
+            self._pending = [e for e in self._pending
+                             if id(e) not in taken]
+        else:
+            take, self._pending = self._pending[:n], self._pending[n:]
+        return [e[2] for e in take]
 
 
 class SlotTable:
@@ -82,6 +118,8 @@ class SlotTable:
         self.occupancy_trace: List[int] = []   # active slots per decode step
         self.prefill_trace: List[int] = []     # prefilling slots per mixed
         #                                        round (chunked admission)
+        self.prefix_hit_tokens = 0             # prompt tokens served from
+        self.prompt_tokens = 0                 # the prefix cache / admitted
 
     # -- state ----------------------------------------------------------
     @property
@@ -127,6 +165,23 @@ class SlotTable:
         assert len(decode_counts) == len(prefill_counts)
         self.occupancy_trace.extend(int(c) for c in decode_counts)
         self.prefill_trace.extend(int(c) for c in prefill_counts)
+
+    def record_prefix(self, hit_tokens: int, prompt_tokens: int) -> None:
+        """One admission's prefix-cache outcome: ``hit_tokens`` of the
+        ``prompt_tokens``-token prompt were found cached (prefill starts
+        after them).  Zero hits are recorded too — the denominator must
+        cover every admission or the rate flatters the cache."""
+        assert 0 <= hit_tokens < max(prompt_tokens, 1)
+        self.prefix_hit_tokens += int(hit_tokens)
+        self.prompt_tokens += int(prompt_tokens)
+
+    def prefix_hit_rate(self) -> float:
+        """Fraction of admitted prompt tokens served from the prefix
+        cache (0.0 when prefix caching is off or nothing was
+        admitted)."""
+        if self.prompt_tokens == 0:
+            return 0.0
+        return self.prefix_hit_tokens / self.prompt_tokens
 
     @property
     def decode_steps(self) -> int:

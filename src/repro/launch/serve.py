@@ -6,12 +6,21 @@ decode concurrently, finished slots (EOS or budget) are recycled via
 prefill injection — one-shot whole-prompt admission by default, or
 *chunked prefill* (--prefill-chunk N: mixed wave-steps that ingest up to
 N prompt tokens per round alongside decode, so a long prompt never
-stalls the wave).  The report includes tokens/s, time-to-first-token
-p50/p95 (the headline metric chunked prefill moves) and the measured
+stalls the wave).  --page-size switches the KV cache to the paged
+page-pool layout and --prefix-cache adds radix prefix reuse across
+requests: admission matches each prompt against a prefix tree and skips
+prefill on the cached prefix (--shared-prompts S makes the first S
+prompt tokens identical across requests so the cache has something to
+hit).  The report includes tokens/s, time-to-first-token p50/p95 (the
+headline metric chunked prefill and prefix reuse move), the prefix-
+cache token hit rate with the prefill tokens skipped, and the measured
 mean decode-wave occupancy next to the cost model's ideal.
 
     PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b --smoke \
         --batch 16 --wave 4 --prompt-len 32 --new-tokens 16 --prefill-chunk 8
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
+        --batch 16 --wave 4 --prompt-len 32 --new-tokens 16 \
+        --prefill-chunk 8 --page-size 8 --prefix-cache --shared-prompts 24
 """
 from __future__ import annotations
 
@@ -48,7 +57,25 @@ def main():
                     help="retire sequences on this token id")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="paged KV cache: tokens per pool page "
+                         "(0 = contiguous per-slot cache)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix prefix reuse across requests (skips "
+                         "prefill on cached prompt prefixes; implies "
+                         "--page-size 8 unless given)")
+    ap.add_argument("--shared-prompts", type=int, default=0,
+                    help="make the first N prompt tokens identical "
+                         "across requests (a shared system prompt)")
+    ap.add_argument("--expect-prefix-hits", action="store_true",
+                    help="exit nonzero unless the prefix-cache token "
+                         "hit rate is > 0 (CI smoke)")
     args = ap.parse_args()
+    if args.prefix_cache and args.page_size == 0:
+        args.page_size = 8
+    if args.page_size and args.prefill_chunk == 0:
+        # paged admission is chunked by construction
+        args.prefill_chunk = min(args.prompt_len, 16)
 
     cfg = archs.get(args.arch, smoke=args.smoke)
     if cfg.is_encoder_only:
@@ -59,6 +86,9 @@ def main():
     params = T.init_params(key, cfg)
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size, jnp.int32)
+    if args.shared_prompts > 0:
+        s = min(args.shared_prompts, args.prompt_len)
+        prompts = prompts.at[:, :s].set(prompts[0, :s])
     wave = args.wave or decode_wave(args.batch)
     sampler = SamplerConfig(max_new_tokens=args.new_tokens,
                             temperature=args.temperature,
@@ -68,7 +98,8 @@ def main():
         gen = lambda **kw: genserve.generate(
             params, cfg, prompts, jax.random.PRNGKey(1), sampler,
             wave=wave, fast_path=False, decode_chunk=args.decode_chunk,
-            prefill_chunk=args.prefill_chunk, **kw)
+            prefill_chunk=args.prefill_chunk, page_size=args.page_size,
+            prefix_cache=args.prefix_cache, **kw)
         gen()            # warm-up: compile the engine programs
         t0 = time.time()
         ro, stats = gen()   # timed run is uninstrumented (TTFT stamping
@@ -76,13 +107,19 @@ def main():
         dt = time.time() - t0
         _, ttft_stats = gen(measure_ttft=True)
     valid = float(jnp.sum(ro["mask"]))
-    rounds = prefill_rounds(args.prompt_len, args.prefill_chunk)
+    hit = float(stats.get("prefix_hit_rate", 0.0))
+    rounds = prefill_rounds(args.prompt_len, args.prefill_chunk,
+                            prefix_hit_rate=hit)
     ideal = predicted_occupancy(args.batch, wave=wave,
                                 prefill_rounds=rounds,
                                 max_new_tokens=args.new_tokens)
     p50, p95 = ttft_quantiles(ttft_stats)
     admission = (f"chunked (C={args.prefill_chunk})"
                  if args.prefill_chunk else "one-shot")
+    if args.page_size:
+        admission += f" paged (page={args.page_size})"
+    if args.prefix_cache:
+        admission += " +prefix-cache"
     print(f"arch={cfg.name} engine={stats['engine']} wave={stats['wave']} "
           f"batch={args.batch} admission={admission}")
     print(f"generated {ro['gen_tokens'].shape} in {dt:.2f}s "
@@ -90,6 +127,10 @@ def main():
           f"rounds, {stats['prefills']} prefill injections, "
           f"{stats.get('prefill_rounds', 0)} prefill-chunk rounds)")
     print(f"ttft p50={p50 * 1e3:.1f}ms p95={p95 * 1e3:.1f}ms")
+    if args.prefix_cache:
+        print(f"prefix cache: {hit:.1%} token hit rate "
+              f"({stats['prefill_tokens_skipped']} of "
+              f"{stats['prompt_tokens']} prompt tokens skipped)")
     if args.prefill_chunk:
         print(f"busy wave occupancy (decode + prefill): "
               f"{stats['busy_occupancy']:.2f} "
@@ -98,6 +139,9 @@ def main():
         print(f"mean wave occupancy: {stats['mean_occupancy']:.2f} "
               f"(cost-model ideal {ideal:.2f})")
     print("sample:", ro["sequences"][0, :24].tolist())
+    if args.expect_prefix_hits and hit <= 0.0:
+        raise SystemExit("expected a nonzero prefix-cache hit rate "
+                         f"(got {hit}) — shared-prompt trace not hitting")
 
 
 if __name__ == "__main__":

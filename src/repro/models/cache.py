@@ -8,6 +8,27 @@ to move whole per-slot cache rows in and out, which is what the
 continuous-batching engine (``repro.genserve``) uses to recycle decode
 slots: a retired slot's rows are simply overwritten by the freshly
 prefilled rows of the next request.
+
+Paged layout (``init_paged_cache`` + the ``paged_*`` helpers): attention
+k/v leaves become a shared *page pool* ``[R, n_pages, page_size, KV, hd]``
+addressed through a per-slot block table ``[B, max_pages]`` (entry j of a
+row maps cache positions ``[j*page_size, (j+1)*page_size)``; the sentinel
+value ``n_pages`` marks an unmapped entry).  ``paged_view`` gathers each
+slot's pages into exactly the contiguous ``[R, B, L, KV, hd]`` view the
+existing decode / prefill-chunk programs consume — everything below the
+gather (batched-jnp attention, the Pallas flash-decode kernel, ring
+windows, GQA) is untouched — and ``paged_update_decode`` /
+``paged_update_chunk`` scatter just the freshly written token k/v back
+into the pool (an exact delta: values are extracted from the contiguous
+view *after* ``write_kv`` applied its ring/clamp semantics, so a paged
+run is token-for-token the contiguous run).  Recurrent (Mamba/RWKV)
+state and ``cm_shift`` stay per-slot ``[R, B, ...]``: O(1) state has no
+pages to share.  An identity block table (``identity_block_table``) makes
+the pool a mere reshape of today's contiguous layout — the exact-parity
+fallback.  Page refcounts, copy-on-write and prefix-cache admission are
+host-side concerns (``repro.genserve.pagepool``); this module only
+provides the device-side indirection (including ``copy_pages`` for the
+COW copies the host schedules).
 """
 from __future__ import annotations
 
@@ -15,6 +36,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.config import Mixer, ModelConfig
 from repro.models import mamba as mamba_mod
@@ -215,3 +237,285 @@ def prefill_kv(cache_k, cache_v, k, v, window: Optional[int]):
     at position 0): full caches keep the first L tokens, ring caches the
     last L — identical layout to writing the sequence token by token."""
     return write_kv(cache_k, cache_v, k, v, 0, window)
+
+
+# ---------------------------------------------------------------------------
+# Paged KV layout: page pools + per-slot block tables
+# ---------------------------------------------------------------------------
+
+
+def supports_prefix_sharing(cfg: ModelConfig, *, long_mode: bool = False) -> bool:
+    """Whether prompt-prefix pages may be shared between slots.
+
+    Sharing is only sound when every layer is full-window attention:
+
+    * a ring (windowed) layer keeps wrapping new tokens onto old slots,
+      so a shared prefix page would be clobbered by whichever slot
+      decodes first — the other sharers would silently read its tokens;
+    * recurrent layers (Mamba/RWKV) summarize the prefix into O(1)
+      state, and the mixed wave-step has no way to snapshot that state
+      at an arbitrary prompt boundary for a later request to adopt.
+
+    The paged *layout* itself still supports windows and recurrent
+    state (each slot's pages stay private); only cross-slot reuse is
+    gated on this predicate."""
+    return all(
+        spec.mixer == Mixer.ATTENTION
+        and effective_window(cfg, spec, long_mode) is None
+        for spec in cfg.pattern)
+
+
+def max_pages_per_slot(cfg: ModelConfig, max_seq: int, page_size: int, *,
+                       long_mode: bool = False) -> int:
+    """Block-table width: pages needed by the largest attention cache."""
+    mps = [-(-kv_cache_len(cfg, spec, max_seq, long_mode) // page_size)
+           for spec in cfg.pattern if spec.mixer == Mixer.ATTENTION]
+    return max(mps, default=0)
+
+
+def identity_block_table(n_slots: int, max_pages: int) -> np.ndarray:
+    """Block table mapping slot b's page j to pool page b*max_pages + j.
+
+    With a pool of exactly ``n_slots * max_pages`` pages this makes the
+    paged layout a pure reshape of the contiguous one — the no-sharing
+    parity fallback (and the layout ``init_paged_cache`` defaults to)."""
+    return np.arange(n_slots * max_pages, dtype=np.int32).reshape(
+        n_slots, max_pages)
+
+
+def init_paged_cache(cfg: ModelConfig, n_slots: int, max_seq: int, *,
+                     page_size: int, n_pages: int = 0,
+                     long_mode: bool = False, dtype=jnp.bfloat16):
+    """Paged cache pytree: same shape as ``init_cache`` except attention
+    k/v leaves are page pools ``[R, n_pages, page_size, KV, hd]`` shared
+    by all slots; recurrent state and cm_shift stay per-slot
+    ``[R, n_slots, ...]``.  ``n_pages=0`` sizes the pool for the
+    identity block table (``n_slots * max_pages_per_slot``)."""
+    if n_pages <= 0:
+        n_pages = n_slots * max_pages_per_slot(
+            cfg, max_seq, page_size, long_mode=long_mode)
+    R = cfg.n_pattern_repeats
+    hd = cfg.resolved_head_dim
+    blocks = {}
+    for j, spec in enumerate(cfg.pattern):
+        if spec.mixer == Mixer.ATTENTION:
+            layer = {
+                "k": jnp.zeros((R, n_pages, page_size, cfg.n_kv_heads, hd),
+                               dtype),
+                "v": jnp.zeros((R, n_pages, page_size, cfg.n_kv_heads, hd),
+                               dtype),
+            }
+        elif spec.mixer == Mixer.MAMBA:
+            st = mamba_mod.init_mamba_state(cfg, n_slots)
+            layer = {k: jnp.broadcast_to(v, (R,) + v.shape)
+                     for k, v in st.items()}
+        elif spec.mixer == Mixer.RWKV6:
+            st = rwkv_mod.init_rwkv_state(cfg, n_slots)
+            layer = {k: jnp.broadcast_to(v, (R,) + v.shape)
+                     for k, v in st.items()}
+        else:
+            raise ValueError(spec.mixer)
+        if spec.ffn.value == "rwkv_channel":
+            layer["cm_shift"] = jnp.zeros((R, n_slots, cfg.d_model), dtype)
+        blocks[f"layer{j}"] = layer
+    return {"blocks": blocks, "pos": jnp.zeros((), jnp.int32)}
+
+
+def paged_view(cfg: ModelConfig, blocks, btab, max_seq: int, *,
+               page_size: int, long_mode: bool = False,
+               identity: bool = False):
+    """Gather each slot's pages into the contiguous blocks view
+    (attention leaves ``[R, B, L, KV, hd]``) the existing decode /
+    prefill-chunk programs consume.  ``btab`` is ``[B, max_pages]``
+    int32; unmapped entries hold the sentinel ``n_pages`` and gather
+    zeros (their positions are masked by validity anyway).
+
+    ``identity=True`` is the static fast path for pools that are known
+    (at trace time) to be addressed by ``identity_block_table`` forever
+    — i.e. paged layout without prefix sharing, where slot ``s`` owns
+    pages ``[s*MP, (s+1)*MP)`` by construction.  The gather collapses
+    to a reshape+slice of the pool (XLA fuses it into the consumer), so
+    the indirection fallback costs ~nothing over the contiguous layout.
+    Only valid when the pool holds exactly ``B * MP`` pages."""
+    out = {}
+    B = btab.shape[0]
+    for j, spec in enumerate(cfg.pattern):
+        name = f"layer{j}"
+        layer = blocks[name]
+        if spec.mixer != Mixer.ATTENTION:
+            out[name] = layer
+            continue
+        L = kv_cache_len(cfg, spec, max_seq, long_mode)
+        mp = -(-L // page_size)
+
+        def g(pool):
+            if identity:
+                assert pool.shape[1] == B * btab.shape[1], \
+                    "identity view needs a pool of exactly B*MP pages"
+                t = pool.reshape(pool.shape[0], B,
+                                 btab.shape[1] * page_size, *pool.shape[3:])
+                return t[:, :, :L]
+            t = jnp.take(pool, btab[:, :mp], axis=1, mode="fill",
+                         fill_value=0)
+            t = t.reshape(t.shape[0], t.shape[1], mp * page_size,
+                          *t.shape[4:])
+            return t[:, :, :L]
+
+        new = dict(layer)
+        new["k"] = g(layer["k"])
+        new["v"] = g(layer["v"])
+        out[name] = new
+    return out
+
+
+def _merge_per_slot(layer, new, mask):
+    """Emit-masked per-slot merge for non-pool leaves of a layer dict."""
+    return {
+        kk: jnp.where(_slot_axes_mask(mask, leaf),
+                      new[kk].astype(leaf.dtype), leaf)
+        for kk, leaf in layer.items()
+    }
+
+
+def paged_update_decode(cfg: ModelConfig, blocks, new_blocks, btab, pos,
+                        emit, max_seq: int, *, page_size: int,
+                        long_mode: bool = False):
+    """Scatter a decode step's per-row token delta back into the pools.
+
+    ``new_blocks`` is the contiguous view *after* ``decode_step`` ran on
+    it; ``pos`` is the [B] pre-increment per-slot position the token was
+    written at (ring slot pos % L, full-cache slot min(pos, L-1) — the
+    same mapping ``write_kv`` used, so the extracted value is exact).
+    Rows where ``emit`` is False write nothing: a freed page can never
+    be corrupted by a retired slot's stale block-table row."""
+    B = btab.shape[0]
+    rows = jnp.arange(B)
+    p = jnp.asarray(pos, jnp.int32)
+    out = {}
+    for j, spec in enumerate(cfg.pattern):
+        name = f"layer{j}"
+        layer = blocks[name]
+        new = new_blocks[name]
+        if spec.mixer != Mixer.ATTENTION:
+            out[name] = _merge_per_slot(layer, new, emit)
+            continue
+        L = kv_cache_len(cfg, spec, max_seq, long_mode)
+        w = effective_window(cfg, spec, long_mode)
+        slot = p % L if w is not None else jnp.minimum(p, L - 1)
+        n_pool = layer["k"].shape[1]
+        page = btab[rows, slot // page_size]
+        page = jnp.where(emit, page, n_pool)   # masked rows -> dropped
+        off = slot % page_size
+
+        def u(pool, view):
+            val = jnp.take_along_axis(
+                view, slot[None, :, None, None, None], axis=2)[:, :, 0]
+            return pool.at[:, page, off].set(val.astype(pool.dtype),
+                                             mode="drop")
+
+        upd = {kk: leaf for kk, leaf in layer.items()}
+        upd["k"] = u(layer["k"], new["k"])
+        upd["v"] = u(layer["v"], new["v"])
+        for kk in layer:
+            if kk not in ("k", "v"):
+                upd[kk] = jnp.where(_slot_axes_mask(emit, layer[kk]),
+                                    new[kk].astype(layer[kk].dtype),
+                                    layer[kk])
+        out[name] = upd
+    return out
+
+
+def paged_update_chunk(cfg: ModelConfig, blocks, new_blocks, btab, pcur,
+                       n_valid, chunk: int, max_seq: int, *,
+                       page_size: int, long_mode: bool = False):
+    """Scatter a prefill chunk's token deltas back into the pools.
+
+    Chunk token c of row b sits at absolute position ``pcur[b] + c`` and
+    is live when ``c < n_valid[b]``.  Values are read from the
+    post-``prefill_chunk_step`` contiguous view at the slot each
+    position maps to, so ring-wrap duplicates and full-cache clamps all
+    read the *final* value ``write_kv`` left there — duplicate scatter
+    targets carry identical payloads and ordering cannot matter."""
+    B = btab.shape[0]
+    rows = jnp.arange(B)[:, None]
+    positions = jnp.asarray(pcur, jnp.int32)[:, None] + jnp.arange(chunk)
+    valid = jnp.arange(chunk)[None, :] < jnp.asarray(n_valid)[:, None]
+    out = {}
+    for j, spec in enumerate(cfg.pattern):
+        name = f"layer{j}"
+        layer = blocks[name]
+        new = new_blocks[name]
+        if spec.mixer != Mixer.ATTENTION:
+            out[name] = _merge_per_slot(layer, new, jnp.asarray(n_valid) > 0)
+            continue
+        L = kv_cache_len(cfg, spec, max_seq, long_mode)
+        w = effective_window(cfg, spec, long_mode)
+        slot = positions % L if w is not None else jnp.minimum(positions,
+                                                               L - 1)
+        n_pool = layer["k"].shape[1]
+        page = btab[jnp.broadcast_to(rows, slot.shape), slot // page_size]
+        page = jnp.where(valid, page, n_pool)
+        off = slot % page_size
+
+        def u(pool, view):
+            val = jnp.take_along_axis(
+                view, slot[None, :, :, None, None], axis=2)
+            return pool.at[:, page, off].set(val.astype(pool.dtype),
+                                             mode="drop")
+
+        upd = {kk: leaf for kk, leaf in layer.items()}
+        upd["k"] = u(layer["k"], new["k"])
+        upd["v"] = u(layer["v"], new["v"])
+        for kk in layer:
+            if kk not in ("k", "v"):
+                upd[kk] = jnp.where(
+                    _slot_axes_mask(jnp.asarray(n_valid) > 0, layer[kk]),
+                    new[kk].astype(layer[kk].dtype), layer[kk])
+        out[name] = upd
+    return out
+
+
+def copy_pages(cfg: ModelConfig, blocks, src, dst):
+    """Device-side page copies: ``pool[dst[i]] = pool[src[i]]`` in every
+    attention layer's k and v pool — the copy-on-write step the host
+    allocator schedules when an admission diverges mid-page from a
+    cached prefix.  ``src``/``dst`` are equal-length int32 vectors;
+    entries padded with the sentinel page id are dropped."""
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+    out = {}
+    for j, spec in enumerate(cfg.pattern):
+        name = f"layer{j}"
+        layer = blocks[name]
+        if spec.mixer != Mixer.ATTENTION:
+            out[name] = layer
+            continue
+        upd = dict(layer)
+        for kk in ("k", "v"):
+            pool = layer[kk]
+            vals = jnp.take(pool, src, axis=1, mode="fill", fill_value=0)
+            upd[kk] = pool.at[:, dst].set(vals, mode="drop")
+        out[name] = upd
+    return out
+
+
+def zero_paged_slots(cfg: ModelConfig, blocks, slot_mask):
+    """Paged analogue of ``zero_slots``: zero only the *per-slot* leaves
+    (recurrent state, cm_shift) of slots where ``slot_mask`` is True.
+    Page-pool k/v is deliberately left untouched — stale page contents
+    are masked by position validity exactly as in the contiguous layout,
+    and zeroing through a recycled slot's block-table row could clobber
+    a page still referenced by a live sharer."""
+    out = {}
+    for j, spec in enumerate(cfg.pattern):
+        name = f"layer{j}"
+        layer = blocks[name]
+        upd = {}
+        for kk, leaf in layer.items():
+            if spec.mixer == Mixer.ATTENTION and kk in ("k", "v"):
+                upd[kk] = leaf
+            else:
+                upd[kk] = jnp.where(_slot_axes_mask(slot_mask, leaf),
+                                    jnp.zeros((), leaf.dtype), leaf)
+        out[name] = upd
+    return out

@@ -472,3 +472,29 @@ def test_elastic_controller_stays_on_mild_drift():
     assert trainer.engine.epoch == 0
     # predictions now price the drifted topology even without a swap
     assert trainer.engine.topo is mild
+
+
+def test_update_topology_unfit_incumbent_keeps_old_topo():
+    """Regression: after a device drop with no feasible challenger
+    (reschedule keeps the incumbent), ``update_topology`` used to adopt
+    the shrunken, re-indexed device list under a plan that still
+    addresses the dropped ids — ``compare_with_simulator`` /
+    ``epoch_report`` then indexed out of range.  The engine now keeps
+    the old topology for prediction and marks the epoch
+    ``topology_stale`` instead."""
+    trainer, topo, wf = make_trainer()
+    run_iters(trainer, 2)
+    eng = trainer.engine
+    dropped = topology.drop_devices(topo, [topo.n - 1])
+    assert not trainer.plan.fits_topology(dropped)
+    eng.update_topology(dropped)
+    assert eng.topology_stale
+    assert eng.topo.n == topo.n            # old topology kept
+    rep = eng.epoch_report()               # used to raise IndexError
+    assert np.isfinite(rep[-1]["predicted_iter_s"])
+    cmp_ = eng.compare_with_simulator()
+    assert np.isfinite(cmp_["predicted_iter_s"])
+    # a topology the incumbent fits is adopted and clears the flag
+    eng.update_topology(topo)
+    assert not eng.topology_stale
+    assert eng.topo is topo

@@ -262,6 +262,38 @@ def test_sjf_admission_policy():
     assert s_sjf["admitted"] == s_sjf["retired"] == B
 
 
+def test_sjf_aging_anti_starvation():
+    """``aging=K`` bounds SJF starvation: a long request passed over K
+    times jumps ahead of every shorter newcomer (starved requests drain
+    in arrival order); ``aging=0`` reproduces the pure static order;
+    and greedy outputs still equal the FIFO run request-for-request —
+    admission order changes, per-request results do not."""
+    reqs = [Request(0, 5), Request(1, 1), Request(2, 1), Request(3, 1),
+            Request(4, 1)]
+    q = RequestQueue(list(reqs), policy="sjf", aging=2)
+    order = [q.pop(1)[0].rid for _ in range(5)]
+    # rid 0 (budget 5) is skipped twice, then admitted before rids 3, 4
+    assert order == [1, 2, 0, 3, 4]
+    q0 = RequestQueue(list(reqs), policy="sjf", aging=0)
+    assert [r.rid for r in q0.pop(5)] == [1, 2, 3, 4, 0]
+
+    cfg = tiny_cfg()
+    params = T.init_params(KEY, cfg)
+    B, W = 10, 3
+    lens = [N, 1, N, 2, 1, N, 2, N, 1, N]
+    prompts = prompts_for(B, key=21)
+    fifo, _ = serve(params, cfg, prompts, KEY,
+                    GenServeConfig(wave=W, max_new_tokens=N, greedy=True),
+                    gen_lens=lens)
+    aged, s_aged = serve(params, cfg, prompts, KEY,
+                         GenServeConfig(wave=W, max_new_tokens=N,
+                                        greedy=True, admission="sjf",
+                                        sjf_aging=1),
+                         gen_lens=lens)
+    assert_rollout_equal(fifo, aged)
+    assert s_aged["admitted"] == s_aged["retired"] == B
+
+
 # ---------------------------------------------------------------------------
 # Chunked prefill (mixed wave-step admission)
 # ---------------------------------------------------------------------------

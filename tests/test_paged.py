@@ -1,0 +1,335 @@
+"""Paged KV cache + radix prefix reuse (genserve perf-opt layer).
+
+- paged no-sharing exactness vs the contiguous chunked engine across
+  the PR-5 admission matrix — ring windows, GQA, recycled slots,
+  prompts longer than the chunk, ragged prompt_lens — under sampling
+  (the identity block table must be invisible);
+- single-wave paged batches token-exact vs ``rl.rollout.generate``
+  (the acceptance pin: sharing disabled, reference path reproduced);
+- prefix sharing under greedy decoding: token-exact vs the contiguous
+  run, deterministic skipped-token counts, copy-on-write on a
+  divergent partial page;
+- host allocator: PagePool/RadixCache refcount + free-list invariants
+  under a randomized admit/insert/evict/retire exerciser;
+- device indirection units: identity view == gather view, copy_pages
+  sentinel semantics, zero_paged_slots leaves the pool untouched,
+  supports_prefix_sharing predicate;
+- cost-model pricing with an expected prefix-hit rate
+  (``prefill_rounds`` / ``predicted_occupancy`` / ``gen_prefill_chunk``).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import plan as plan_mod
+from repro.data.synthetic import EOS, VOCAB_SIZE
+from repro.genserve.decoder import GenServeConfig, serve
+from repro.genserve.pagepool import PagePool, RadixCache
+from repro.models import cache as cache_mod
+from repro.models import transformer as T
+from repro.models.config import LayerSpec, ModelConfig
+
+KEY = jax.random.PRNGKey(0)
+P, N = 8, 6
+
+
+def paged_cfg(window=None, n_kv_heads=2):
+    return ModelConfig(name=f"pg-w{window}-kv{n_kv_heads}", n_layers=2,
+                       d_model=64, n_heads=2, n_kv_heads=n_kv_heads,
+                       head_dim=32, d_ff=128, vocab_size=VOCAB_SIZE,
+                       dtype="float32", pattern=(LayerSpec(window=window),))
+
+
+def prompts_for(n, key=3, cfg=None):
+    return jax.random.randint(jax.random.PRNGKey(key), (n, P), 0,
+                              (cfg or paged_cfg()).vocab_size, jnp.int32)
+
+
+def assert_rollout_equal(ref, got, atol=1e-4):
+    mr, mg = np.asarray(ref["mask"]), np.asarray(got["mask"])
+    np.testing.assert_array_equal(mr, mg)
+    np.testing.assert_array_equal(
+        np.asarray(ref["gen_tokens"]) * mr.astype(np.int32),
+        np.asarray(got["gen_tokens"]) * mg.astype(np.int32))
+    np.testing.assert_allclose(np.asarray(ref["logprobs"]) * mr,
+                               np.asarray(got["logprobs"]) * mg,
+                               rtol=1e-4, atol=atol)
+    np.testing.assert_array_equal(np.asarray(ref["sequences"])[:, :P],
+                                  np.asarray(got["sequences"])[:, :P])
+
+
+# ---------------------------------------------------------------------------
+# Paged (identity block table) == contiguous, across the admission matrix
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("window,kv,ps", [
+    (None, 2, 4),     # full attention
+    (6, 2, 4),        # ring window (< max_seq: wraps mid-run)
+    (None, 1, 2),     # GQA, page smaller than any prompt
+    (6, 1, 3),        # ring + GQA + page not dividing the window
+])
+def test_paged_noshare_matrix_exact(window, kv, ps):
+    """The paged cache behind an identity block table is token-exact vs
+    the contiguous chunked engine under sampling: recycled slots
+    (B > W), prompts longer than the chunk, ragged prompt_lens, EOS
+    retirement — the indirection must be invisible."""
+    cfg = paged_cfg(window, kv)
+    params = T.init_params(KEY, cfg)
+    B, W, C = 10, 3, 3
+    prompts = prompts_for(B, key=11, cfg=cfg)
+    plens = [8, 5, 3, 8, 4, 8, 6, 3, 8, 5]
+    lens = [N, 1, N, 2, 1, N, 2, N, 1, N]
+    kw = dict(wave=W, max_new_tokens=N, eos_token=EOS, prefill_chunk=C,
+              temperature=1.0, greedy=False)
+    ref, _ = serve(params, cfg, prompts, jax.random.PRNGKey(7),
+                   GenServeConfig(**kw), gen_lens=lens, prompt_lens=plens)
+    got, stats = serve(params, cfg, prompts, jax.random.PRNGKey(7),
+                       GenServeConfig(**kw, page_size=ps),
+                       gen_lens=lens, prompt_lens=plens)
+    assert_rollout_equal(ref, got)
+    assert stats["page_size"] == ps and not stats["prefix_cache"]
+    assert stats["prefix_hit_rate"] == 0.0
+
+
+def test_paged_single_wave_exact_vs_rollout():
+    """Acceptance pin: a single-wave paged batch with sharing disabled
+    reproduces ``rl.rollout.generate`` token-for-token under sampling."""
+    from repro.rl import rollout
+    cfg = paged_cfg()
+    params = T.init_params(KEY, cfg)
+    prompts = prompts_for(4)
+    sampler = rollout.SamplerConfig(max_new_tokens=N, temperature=1.0,
+                                    eos_token=EOS)
+    ref = rollout.generate(params, cfg, prompts, jax.random.PRNGKey(7),
+                           sampler)
+    got, stats = serve(params, cfg, prompts, jax.random.PRNGKey(7),
+                       GenServeConfig(wave=4, max_new_tokens=N,
+                                      eos_token=EOS, prefill_chunk=3,
+                                      temperature=1.0, greedy=False,
+                                      page_size=4))
+    assert_rollout_equal(ref, got)
+    assert stats["admitted"] == stats["retired"] == 4
+
+
+# ---------------------------------------------------------------------------
+# Prefix sharing (greedy): exactness, hit accounting, copy-on-write
+# ---------------------------------------------------------------------------
+
+def test_prefix_sharing_greedy_exact_and_hits():
+    """Under greedy decoding prefix sharing is token-exact vs the
+    contiguous run (skipped prefill shifts landing rounds, which only
+    matters for sampled rng consumption): staggered re-admissions of
+    two hot prompts hit everything but the capped last token."""
+    cfg = paged_cfg()
+    params = T.init_params(KEY, cfg)
+    B, W, C, ps = 10, 2, 4, 2
+    base = prompts_for(2, key=5, cfg=cfg)
+    prompts = jnp.asarray(np.asarray(base)[np.arange(B) % 2])
+    lens = [3, 2, 4, 3, 2, 3, 4, 2, 3, 3]
+    kw = dict(wave=W, max_new_tokens=N, prefill_chunk=C, greedy=True)
+    ref, _ = serve(params, cfg, prompts, KEY, GenServeConfig(**kw),
+                   gen_lens=lens)
+    got, stats = serve(params, cfg, prompts, KEY,
+                       GenServeConfig(**kw, page_size=ps,
+                                      prefix_cache=True),
+                       gen_lens=lens)
+    assert_rollout_equal(ref, got)
+    # wave 0 admits both hot prompts (miss: pages publish at landing);
+    # the 8 re-admissions each hit P-1 = 7 tokens (3 full pages + a
+    # 1-token partial overlap, capped so the landing chunk still runs)
+    assert stats["prefill_tokens_skipped"] == 8 * (P - 1)
+    assert stats["prefix_hit_rate"] == pytest.approx(8 * 7 / (10 * 8))
+    stats["_pagepool"].check()
+
+
+def test_prefix_sharing_cow_divergent_page():
+    """A prompt diverging inside the last matched partial page triggers
+    copy-on-write: the shared page is copied before the divergent
+    suffix is written, so the donor's cache (and output) is untouched
+    and both runs stay exact vs contiguous."""
+    cfg = paged_cfg()
+    params = T.init_params(KEY, cfg)
+    ps, C, W = 4, 4, 2
+    rng = np.random.default_rng(9)
+    base = rng.integers(0, cfg.vocab_size, P)
+    other = rng.integers(0, cfg.vocab_size, P)
+    div = base.copy()
+    div[-1] = (div[-1] + 1) % cfg.vocab_size     # diverge in page 1
+    prompts = jnp.asarray(np.stack([base, other, div, base]), jnp.int32)
+    lens = [2, 6, 3, 3]
+    kw = dict(wave=W, max_new_tokens=N, prefill_chunk=C, greedy=True)
+    ref, _ = serve(params, cfg, prompts, KEY, GenServeConfig(**kw),
+                   gen_lens=lens)
+    got, stats = serve(params, cfg, prompts, KEY,
+                       GenServeConfig(**kw, page_size=ps,
+                                      prefix_cache=True),
+                       gen_lens=lens)
+    assert_rollout_equal(ref, got)
+    # r2 (divergent) and r3 (identical) each hit 1 full page + a
+    # 3-token partial: 7 tokens apiece; r0/r1 miss (first wave)
+    assert stats["prefill_tokens_skipped"] == 2 * 7
+    stats["_pagepool"].check()
+
+
+# ---------------------------------------------------------------------------
+# Host allocator invariants
+# ---------------------------------------------------------------------------
+
+def test_pagepool_radix_random_invariants():
+    """Randomized admit/insert/evict/retire against the decoder's own
+    allocation discipline: refcount/free-list invariants hold at every
+    step, eviction can always make room (pool = 2*W*MP), and a full
+    drain + evict returns every page to the free list."""
+    ps, MP, W = 2, 4, 2
+    NP = 2 * W * MP
+    pool = PagePool(NP, ps)
+    radix = RadixCache(pool)
+    rng = np.random.default_rng(0)
+    live = {}
+    for _ in range(300):
+        if len(live) < W and (not live or rng.random() < 0.6):
+            toks = rng.integers(0, 3, P).tolist()    # small alphabet:
+            full, part = radix.match(toks, len(toks) - 1)   # real hits
+            pool.incref(full)
+            cow = []
+            if part is not None:
+                pool.incref([part[0]])
+                cow = [part[0]]
+            need = MP - len(full)
+            if pool.available() < need:
+                radix.evict(need - pool.available())
+            fresh = pool.alloc(need)
+            assert fresh is not None, "2*W*MP pool must always admit"
+            pool.decref(cow)
+            row = full + fresh
+            slot = min(set(range(W)) - set(live))
+            live[slot] = row
+            radix.insert(toks, row[:len(toks) // ps])
+        else:
+            pool.decref(live.pop(int(rng.choice(sorted(live)))))
+        pool.check()
+        assert all(rc <= W + 1 for rc in pool.refcount)
+    for row in live.values():
+        pool.decref(row)
+    pool.check()
+    radix.evict(NP)
+    assert pool.available() == NP
+    pool.check()
+
+
+# ---------------------------------------------------------------------------
+# Device-side indirection units
+# ---------------------------------------------------------------------------
+
+def _mixed_cfg():
+    return ModelConfig(name="pg-mixed", n_layers=2, d_model=64, n_heads=2,
+                       n_kv_heads=2, head_dim=32, d_ff=128,
+                       vocab_size=VOCAB_SIZE, dtype="float32",
+                       pattern=(LayerSpec(), LayerSpec(window=6)))
+
+
+def _random_paged(cfg, W, max_seq, ps, seed=0):
+    blocks = cache_mod.init_paged_cache(cfg, W, max_seq, page_size=ps,
+                                        dtype=jnp.float32)["blocks"]
+    rng = np.random.default_rng(seed)
+    return jax.tree_util.tree_map(
+        lambda l: jnp.asarray(rng.standard_normal(l.shape), l.dtype),
+        blocks)
+
+
+def test_identity_view_matches_gather_view():
+    """The static identity fast path (reshape) must equal the general
+    gather through an identity block table — including windowed layers
+    whose per-layer page count is below the global max."""
+    cfg = _mixed_cfg()
+    W, max_seq, ps = 3, 14, 4
+    blocks = _random_paged(cfg, W, max_seq, ps)
+    MP = cache_mod.max_pages_per_slot(cfg, max_seq, ps)
+    btab = jnp.asarray(cache_mod.identity_block_table(W, MP))
+    a = cache_mod.paged_view(cfg, blocks, btab, max_seq, page_size=ps)
+    b = cache_mod.paged_view(cfg, blocks, btab, max_seq, page_size=ps,
+                             identity=True)
+    jax.tree_util.tree_map(np.testing.assert_array_equal, a, b)
+
+
+def test_copy_pages_sentinel_semantics():
+    """copy_pages: a sentinel source writes zeros, a sentinel
+    destination is dropped, real pairs copy exactly."""
+    cfg = paged_cfg()
+    W, max_seq, ps = 2, 14, 4
+    blocks = _random_paged(cfg, W, max_seq, ps)
+    NP = blocks["layer0"]["k"].shape[1]
+    src = jnp.asarray([0, NP, 1], jnp.int32)
+    dst = jnp.asarray([2, 3, NP], jnp.int32)
+    out = cache_mod.copy_pages(cfg, blocks, src, dst)
+    for name in blocks:
+        for leaf in ("k", "v"):
+            old = np.asarray(blocks[name][leaf])
+            new = np.asarray(out[name][leaf])
+            np.testing.assert_array_equal(new[:, 2], old[:, 0])
+            np.testing.assert_array_equal(new[:, 3], np.zeros_like(old[:, 3]))
+            keep = [i for i in range(NP) if i not in (2, 3)]
+            np.testing.assert_array_equal(new[:, keep], old[:, keep])
+
+
+def test_zero_paged_slots_leaves_pool_untouched():
+    """Zeroing a recycled slot must not clobber the pool — a freed
+    slot's pages may be shared with (or reallocated to) other slots;
+    validity masks make the stale content unobservable."""
+    cfg = paged_cfg()
+    blocks = _random_paged(cfg, 2, 14, 4)
+    out = cache_mod.zero_paged_slots(cfg, blocks,
+                                     jnp.asarray([True, False]))
+    for name in blocks:
+        for leaf in ("k", "v"):
+            np.testing.assert_array_equal(np.asarray(out[name][leaf]),
+                                          np.asarray(blocks[name][leaf]))
+
+
+def test_supports_prefix_sharing_predicate():
+    assert cache_mod.supports_prefix_sharing(paged_cfg())
+    assert not cache_mod.supports_prefix_sharing(paged_cfg(window=6))
+
+
+# ---------------------------------------------------------------------------
+# Cost-model pricing with an expected prefix-hit rate
+# ---------------------------------------------------------------------------
+
+def test_prefill_rounds_prefix_hit_rate():
+    assert plan_mod.prefill_rounds(256, 32) == 8
+    assert plan_mod.prefill_rounds(256, 32, prefix_hit_rate=0.75) == 2
+    # the landing chunk always runs, even on a full hit
+    assert plan_mod.prefill_rounds(256, 32, prefix_hit_rate=1.0) == 1
+    assert plan_mod.prefill_rounds(256, 0, prefix_hit_rate=0.9) == 0
+
+
+def test_predicted_occupancy_prefix_hit_rate():
+    # gen_lens=[10, 1], prefill_rounds=[1, 5]: busy 17 over an 11-round
+    # chain (pinned by test_genserve).  An 80% hit rate shrinks the
+    # per-request rounds to max(0.2*c, 1) -> [1, 1]: busy 13, same chain
+    hot = plan_mod.predicted_occupancy(2, wave=4, gen_lens=[10, 1],
+                                       prefill_rounds=[1, 5],
+                                       prefix_hit_rate=0.8)
+    assert hot == pytest.approx(13 / 11)
+    # one-shot admission (no rounds) is untouched by the hit rate
+    assert plan_mod.predicted_occupancy(
+        2, wave=4, gen_lens=[10, 1], prefix_hit_rate=0.9) == \
+        plan_mod.predicted_occupancy(2, wave=4, gen_lens=[10, 1])
+
+
+def test_gen_prefill_chunk_prefix_hit_rate():
+    """The mixed-round prefill price scales by the uncached fraction."""
+    from repro.core.costmodel import CostModel
+    from repro.core import topology, workflow
+    from repro.core.enumerate import build_plan
+    topo = topology.build_host(2)
+    wf = workflow.make_grpo(workflow.QWEN_1_7B, global_batch=64)
+    plan = build_plan(topo, wf, (tuple(range(wf.n_tasks)),), [2], [0, 1])
+    cm = CostModel(topo, wf)
+    c = cm.gen_prefill_chunk(plan, 0, chunk=32)
+    assert c > 0
+    assert cm.gen_prefill_chunk(plan, 0, chunk=32, prefix_hit_rate=0.5) \
+        == pytest.approx(0.5 * c)
+    assert cm.gen_prefill_chunk(plan, 0, chunk=32, prefix_hit_rate=1.0) \
+        == 0.0
