@@ -1,0 +1,158 @@
+"""Observability acceptance: tracing overhead + cost-model calibration.
+
+Two axes, each an acceptance gate for the ``repro.obs`` layer:
+
+Overhead axis — the span tracer must be cheap enough to leave on.  The
+genserve engine runs the same serving workload with tracing disabled
+and enabled in alternating repetitions (so slow container phases hit
+both arms equally); the median wall-time inflation is gated at < 5%.
+The spans on this path are per host round (``gen.round`` + one
+admission or decode child), i.e. a few hundred nanoseconds of
+``perf_counter_ns`` bookkeeping against a jitted device step — the gate
+verifies the bookkeeping never grew a device sync.
+
+Calibration axis — the cost model prices the *planned* testbed (A100 /
+L4 specs), while the smoke engine folds execution onto the local CPU
+host, so the raw measured-vs-predicted iteration ratio sits around
+10^4–10^6.  ``obs.calibrate.fit_from_engine`` fits per-device-class
+scale factors from the measured Event timeline; rerunning the simulator
+with the ``CalibratedCostModel`` must bring the ratio within 10x of
+unity (paper Fig. 7's usable regime).  The raw and corrected ratios are
+both reported so the correction factor itself is visible in the
+summary.
+
+Writes ``results/obs_overhead.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import statistics
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.genserve import adapter as genserve
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.rl import rollout
+
+from benchmarks.common import QUICK, emit
+
+
+def _overhead_axis(quick: bool):
+    cfg = ModelConfig(name="obs-bench", n_layers=2, d_model=256,
+                      n_heads=4, n_kv_heads=2, head_dim=64, d_ff=512,
+                      vocab_size=128, dtype="float32")
+    wave, B = 8, 32
+    N = 24 if quick else 48
+    P = 16
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, P), 0,
+                                 cfg.vocab_size, jnp.int32)
+    rng = np.random.default_rng(3)
+    gen_lens = np.minimum(rng.geometric(3.0 / N, B), N)
+    sampler = rollout.SamplerConfig(max_new_tokens=N, greedy=True)
+
+    def serve():
+        ro, _ = genserve.generate(params, cfg, prompts,
+                                  jax.random.PRNGKey(2), sampler,
+                                  wave=wave, decode_chunk=1,
+                                  gen_lens=gen_lens, fast_path=False)
+        jax.block_until_ready(ro["sequences"])
+
+    was_enabled = obs_trace.is_enabled()
+    reps = 6 if quick else 12
+    times = {"off": [], "on": []}
+    try:
+        serve()                       # compile once, outside both arms
+        for _ in range(reps):
+            for arm in ("off", "on"):
+                if arm == "on":
+                    obs_trace.enable()
+                else:
+                    obs_trace.disable()
+                t0 = time.monotonic()
+                serve()
+                times[arm].append(time.monotonic() - t0)
+            obs_trace.reset()         # bound the span buffer growth
+    finally:
+        obs_trace.disable()
+        obs_trace.reset()
+        if was_enabled:
+            obs_trace.enable()
+    off = statistics.median(times["off"])
+    on = statistics.median(times["on"])
+    return {"reps": reps, "wall_off_s": off, "wall_on_s": on,
+            "overhead_pct": (on / off - 1.0) * 100.0}
+
+
+def _calibration_axis(quick: bool):
+    from repro.data.synthetic import AdditionTask, VOCAB_SIZE
+    from repro.obs import calibrate as obs_cal
+    from repro.rl.trainer import RLConfig, RLTrainer
+
+    cfg = ModelConfig(name="obs-cal", n_layers=1, d_model=32, n_heads=2,
+                      n_kv_heads=2, d_ff=64, vocab_size=VOCAB_SIZE,
+                      dtype="float32")
+    task = AdditionTask(max_operand=9)
+    trainer = RLTrainer(cfg, RLConfig(algorithm="grpo", n_rollouts=2,
+                                      max_new_tokens=task.max_answer_len),
+                        task, jax.random.PRNGKey(0))
+    iters = 4 if quick else 8
+    key = jax.random.PRNGKey(42)
+    for i in range(iters):
+        prompts, answers = task.sample_batch(np.random.default_rng(i), 2)
+        key, k = jax.random.split(key)
+        trainer.iteration(prompts, answers, k)
+
+    cal = obs_cal.fit_from_engine(trainer.engine, skip_iterations=1)
+    raw = trainer.engine.compare_with_simulator()
+    corrected = trainer.engine.compare_with_simulator(
+        cost_model=cal.cost_model(trainer.engine.topo, trainer.wf))
+    return {"iterations": iters,
+            "raw_ratio": raw["ratio"],
+            "calibrated_ratio": corrected["ratio"],
+            "correction": raw["ratio"] / corrected["ratio"],
+            "calibration": cal.to_dict()}
+
+
+def run(quick: bool = QUICK):
+    obs_metrics.reset()
+    ov = _overhead_axis(quick)
+    print(f"[obs_overhead] tracing off {ov['wall_off_s'] * 1e3:.1f}ms vs "
+          f"on {ov['wall_on_s'] * 1e3:.1f}ms "
+          f"({ov['overhead_pct']:+.2f}%)")
+    cal = _calibration_axis(quick)
+    print(f"[obs_overhead] measured/predicted ratio "
+          f"{cal['raw_ratio']:.3g} raw -> "
+          f"{cal['calibrated_ratio']:.3g} calibrated "
+          f"(x{cal['correction']:.3g} correction)")
+
+    # acceptance: tracing must stay under 5% wall-time inflation, and
+    # calibration must land the iteration ratio within 10x of unity
+    assert ov["overhead_pct"] < 5.0, ov
+    assert 0.1 < cal["calibrated_ratio"] < 10.0, cal
+
+    emit("obs_overhead", [
+        {"axis": "tracing", "off_s": ov["wall_off_s"],
+         "on_s": ov["wall_on_s"], "overhead_pct": ov["overhead_pct"]},
+        {"axis": "calibration", "off_s": cal["raw_ratio"],
+         "on_s": cal["calibrated_ratio"],
+         "overhead_pct": cal["correction"]},
+    ])
+    os.makedirs("results", exist_ok=True)
+    path = os.path.join("results", "obs_overhead.json")
+    with open(path, "w") as f:
+        json.dump({"overhead": ov, "calibration": cal}, f, indent=2)
+    print(f"[obs_overhead] wrote {path}")
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, "src")
+    run()

@@ -12,11 +12,40 @@ file from which CI and local runs can diff the whole perf trajectory.
 from __future__ import annotations
 
 import argparse
+import datetime
 import json
 import os
+import subprocess
 import sys
 import time
 import traceback
+
+
+def run_metadata() -> dict:
+    """Provenance stamped onto every summary entry: git SHA, UTC
+    timestamp, JAX backend and device kind.  Each probe degrades to a
+    placeholder rather than failing the run (results must be writable
+    from a detached checkout or a backend-less box)."""
+    meta = {"git_sha": "unknown", "timestamp":
+            datetime.datetime.now(datetime.timezone.utc)
+            .isoformat(timespec="seconds")}
+    try:
+        meta["git_sha"] = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        pass
+    try:
+        import jax
+        meta["backend"] = jax.default_backend()
+        devs = jax.devices()
+        meta["device_kind"] = devs[0].device_kind if devs else "none"
+        meta["device_count"] = len(devs)
+    except Exception:
+        meta["backend"] = "unavailable"
+    return meta
 
 
 def write_summary(statuses: dict) -> str:
@@ -59,12 +88,14 @@ def main() -> None:
                             fig4_loadbalance, fig5_search_efficiency,
                             fig6_small_scale_ilp, fig7_costmodel_validation,
                             fig8_training_quality, fig10_heterogeneity,
-                            genserve_throughput)
+                            genserve_throughput, obs_overhead)
     benches = [
         ("engine_throughput", "plan-driven engine, measured vs predicted",
          engine_throughput.run),
         ("elastic_redeploy", "§6 throughput recovery vs degraded incumbent",
          elastic_redeploy.run),
+        ("obs_overhead", "span-tracing overhead + cost-model calibration",
+         obs_overhead.run),
         ("genserve_throughput",
          "continuous batching vs single-wave decode; chunked admission; "
          "paged KV + prefix reuse",
@@ -84,6 +115,7 @@ def main() -> None:
         if not benches:
             raise SystemExit(f"--only {args.only!r} matches no benchmark")
 
+    meta = run_metadata()
     failures = []
     statuses = {}
     for name, desc, fn in benches:
@@ -97,6 +129,7 @@ def main() -> None:
             failures.append(name)
             statuses[name] = {"ok": False}
         statuses[name]["seconds"] = round(time.monotonic() - t0, 2)
+        statuses[name].update(meta)
         print(f"({statuses[name]['seconds']:.0f}s)", flush=True)
 
     if not args.only:

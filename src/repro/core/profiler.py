@@ -53,3 +53,36 @@ def calibrate_local_device(size: int = 1024, iters: int = 8,
     dt = time.perf_counter() - t0
     flops = 2 * size ** 3 * iters
     return flops / dt / 1e12
+
+
+def calibrate_local_hbm(mbytes: int = 64, iters: int = 8,
+                        dtype="float32") -> float:
+    """Achievable memory bandwidth (GB/s) of the local JAX device.
+
+    Microbenches a jitted elementwise copy-scale over a ``mbytes``-MB
+    array: each call streams the buffer in and out once (2x the array
+    bytes), which is the traffic pattern the cost model's C_hbm decode
+    roofline assumes.  Together with ``calibrate_local_device`` this is
+    the measured (TFLOP/s, GB/s) pair ``obs.calibrate`` records per
+    profiled host."""
+    import jax
+    import jax.numpy as jnp
+
+    n = max(mbytes * (1 << 20) // jnp.dtype(dtype).itemsize, 1)
+    x = jnp.ones((n,), dtype)
+    f = jax.jit(lambda a: a * 1.0000001)
+    y = f(x)
+    y.block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        y = f(y)
+    y.block_until_ready()
+    dt = max(time.perf_counter() - t0, 1e-9)
+    nbytes = 2 * x.nbytes * iters          # one read + one write per call
+    return nbytes / dt / 1e9
+
+
+def profile_local() -> Dict[str, float]:
+    """Local-host microbenchmark pair the calibration pass records."""
+    return {"tflops": calibrate_local_device(),
+            "hbm_gbps": calibrate_local_hbm()}

@@ -40,6 +40,14 @@ class Event:
     # epoch at every ``apply_plan`` swap so steady-state estimates never
     # straddle a plan transition.
     epoch: int = 0
+    # host wall-clock (seconds since engine construction) at which the
+    # measured execution behind this event really started/ended, and the
+    # id of the obs.trace span that recorded it.  Replay times (`time`)
+    # follow the simulator's scheduling rules on the plan's devices;
+    # `t_wall` is what the host actually observed — the pair is what
+    # obs.calibrate fits scale factors from.  None on simulated events.
+    t_wall: Optional[float] = None
+    span: Optional[int] = None
 
 
 @dataclasses.dataclass

@@ -21,6 +21,8 @@ from typing import Callable, Dict, List, Optional, Union
 
 from repro.core.redeploy import RedeployDecision, reschedule
 from repro.core.topology import DriftSchedule, Topology, topo_equal
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,6 +45,8 @@ class AdaptRecord:
     ckpt_path: Optional[str] = None
     ckpt_bytes: int = 0
     transition: Dict[str, float] = dataclasses.field(default_factory=dict)
+    reactive: bool = False         # fired by the divergence monitor, not
+    #                                an observed topology change
 
 
 class ElasticController:
@@ -52,12 +56,20 @@ class ElasticController:
 
     def __init__(self, trainer,
                  feed: Union[DriftSchedule, Callable[[int], Topology]],
-                 cfg: Optional[ElasticConfig] = None):
+                 cfg: Optional[ElasticConfig] = None,
+                 monitor=None):
         self.trainer = trainer
         self.feed = feed
         self.cfg = cfg or ElasticConfig()
         self.records: List[AdaptRecord] = []
         self._topo = trainer.engine.topo
+        # optional obs.calibrate.DivergenceMonitor: sustained measured/
+        # predicted drift fires a reschedule against the *current*
+        # topology even when the feed reports no structural change —
+        # the reactive half of "calibrated cost model + reactive
+        # elasticity".  The engine must be feeding the monitor
+        # (Engine.attach_divergence_monitor) for it to ever fire.
+        self.monitor = monitor
 
     def _observe(self, iteration: int) -> Optional[Topology]:
         if hasattr(self.feed, "topo_at"):
@@ -65,46 +77,66 @@ class ElasticController:
         return self.feed(iteration)
 
     def poll(self, iteration: int) -> Optional[AdaptRecord]:
-        """Check the feed; on drift, reschedule / checkpoint / apply.
-        Returns the record when drift was handled, None when quiet."""
+        """Check the feed (and the divergence monitor, when attached);
+        on drift, reschedule / checkpoint / apply.  Returns the record
+        when drift was handled, None when quiet."""
         topo = self._observe(iteration)
-        if topo is None or topo_equal(topo, self._topo):
+        drifted = topo is not None and not topo_equal(topo, self._topo)
+        reactive = (not drifted and self.monitor is not None
+                    and self.monitor.consume())
+        if not drifted and not reactive:
             return None
+        if reactive:
+            # no structural change observed: replan against the
+            # environment we believe we are in — the point is that
+            # measurements say the belief is wrong
+            topo = self._topo
         topo_old, self._topo = self._topo, topo
         trainer, cfg = self.trainer, self.cfg
-        t0 = time.monotonic()
-        decision = reschedule(topo, trainer.wf, trainer.plan,
-                              budget=cfg.budget,
-                              amortization_iters=cfg.amortization_iters,
-                              seed=cfg.seed, topo_old=topo_old)
-        resched_s = time.monotonic() - t0
+        with obs_trace.span("elastic.poll", iteration=iteration,
+                            reactive=reactive):
+            t0 = time.monotonic()
+            with obs_trace.span("elastic.reschedule"):
+                decision = reschedule(
+                    topo, trainer.wf, trainer.plan, budget=cfg.budget,
+                    amortization_iters=cfg.amortization_iters,
+                    seed=cfg.seed, topo_old=topo_old)
+            resched_s = time.monotonic() - t0
+            obs_metrics.histogram("elastic.reschedule_s").observe(
+                resched_s)
 
-        # checkpoint the live state before touching the execution plan —
-        # §6 applies the new plan "immediately after checkpointing", and
-        # a failed migration can restore from here
-        ckpt_path, ckpt_bytes = None, 0
-        if cfg.ckpt_dir:
-            from repro.checkpoint import io as ckpt_io
-            ckpt_path = os.path.join(
-                cfg.ckpt_dir, f"elastic_iter{iteration:05d}.msgpack")
-            ckpt_bytes = ckpt_io.save(ckpt_path, trainer.state_tree())
+            # checkpoint the live state before touching the execution
+            # plan — §6 applies the new plan "immediately after
+            # checkpointing", and a failed migration can restore from
+            # here
+            ckpt_path, ckpt_bytes = None, 0
+            if cfg.ckpt_dir:
+                from repro.checkpoint import io as ckpt_io
+                ckpt_path = os.path.join(
+                    cfg.ckpt_dir, f"elastic_iter{iteration:05d}.msgpack")
+                with obs_trace.span("elastic.checkpoint"):
+                    ckpt_bytes = ckpt_io.save(ckpt_path,
+                                              trainer.state_tree())
+                obs_metrics.counter("elastic.checkpoint_bytes").inc(
+                    ckpt_bytes)
 
-        transition: Dict[str, float] = {}
-        if decision.switch:
-            transition = trainer.engine.apply_plan(
-                decision.plan, topo=topo,
-                carry_pending=cfg.carry_pending)
-        else:
-            # stay on the incumbent, but predictions must price the
-            # drifted environment; when the incumbent no longer fits the
-            # drifted device list (no feasible challenger after a drop)
-            # the engine keeps the old topology and flags
-            # ``topology_stale`` instead of adopting an inconsistent
-            # (plan, topo) pair that would crash prediction
-            trainer.engine.update_topology(topo)
+            transition: Dict[str, float] = {}
+            if decision.switch:
+                transition = trainer.engine.apply_plan(
+                    decision.plan, topo=topo,
+                    carry_pending=cfg.carry_pending)
+            else:
+                # stay on the incumbent, but predictions must price the
+                # drifted environment; when the incumbent no longer fits
+                # the drifted device list (no feasible challenger after
+                # a drop) the engine keeps the old topology and flags
+                # ``topology_stale`` instead of adopting an inconsistent
+                # (plan, topo) pair that would crash prediction
+                trainer.engine.update_topology(topo)
         rec = AdaptRecord(iteration, decision, decision.switch,
                           trainer.engine.epoch, resched_s,
-                          ckpt_path, ckpt_bytes, transition)
+                          ckpt_path, ckpt_bytes, transition,
+                          reactive=reactive)
         self.records.append(rec)
         return rec
 

@@ -40,6 +40,8 @@ from repro.core.workflow import RLWorkflow, TaskKind
 from repro.engine import tasks as tasks_mod
 from repro.engine.pipeline import AsyncPipeline, sync_actor_weights
 from repro.engine.placement import build_placements
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 # pseudo task id for the weight-migration event a plan swap replays onto
 # the timeline (real workflow tasks are 0..n_tasks-1)
@@ -103,6 +105,13 @@ class Engine:
         self._wave_pred_sum = 0.0
         self._wave_calls = 0
         self._t0 = time.monotonic()
+        # measured weight-sync wall-clock per trained iteration — the
+        # sample obs.calibrate fits the reshard/sync coefficient from
+        self.sync_durations: List[float] = []
+        # optional reactive-drift hook (obs.calibrate.DivergenceMonitor)
+        self.divergence_monitor = None
+        self._div_cost_model = None
+        self._pred_cache: Optional[tuple] = None
 
     # -- plan context ---------------------------------------------------
     def _make_context(self, plan: Plan, topo: Optional[Topology],
@@ -197,31 +206,42 @@ class Engine:
         """
         from repro.core import redeploy
         old = self.ctx
-        topo = topo if topo is not None else old.topo
-        trans_s = 0.0
-        if topo is not None:
-            trans_s = redeploy.transition_cost(topo, self.wf, old.plan,
-                                               plan, topo_old=old.topo)
-        # migration window on the replay clock: begins when the outgoing
-        # plan's devices are all idle (iteration boundary + in-flight sync)
-        t0 = max(list(old.dev_free.values()) + [self._sync_done])
-        t1 = t0 + trans_s
-        new_epoch = old.epoch + 1
-        self.timeline.append(Event(t0, "start", self._iter, MIGRATION_TASK,
-                                   epoch=new_epoch))
-        self.timeline.append(Event(t1, "end", self._iter, MIGRATION_TASK,
-                                   epoch=new_epoch))
-        ctx = self._make_context(plan, topo, epoch=new_epoch,
-                                 start_iter=self._iter)
-        for d in ctx.dev_free:
-            ctx.dev_free[d] = t1
-        self._sync_done = max(self._sync_done, t1)
-        dropped = 0
-        if not carry_pending:
-            dropped = int(self.pipeline.drain() is not None)
-        self.ctx_history.append(old)
-        self.ctx = ctx
-        self.topology_stale = False    # the new plan fits its topology
+        with obs_trace.span("engine.swap", iteration=self._iter,
+                            epoch=old.epoch + 1) as sp:
+            topo = topo if topo is not None else old.topo
+            trans_s = 0.0
+            if topo is not None:
+                trans_s = redeploy.transition_cost(topo, self.wf, old.plan,
+                                                   plan, topo_old=old.topo)
+            # migration window on the replay clock: begins when the
+            # outgoing plan's devices are all idle (iteration boundary +
+            # in-flight sync)
+            t0 = max(list(old.dev_free.values()) + [self._sync_done])
+            t1 = t0 + trans_s
+            new_epoch = old.epoch + 1
+            # the replay window [t0, t1) is priced, not measured — the
+            # host observes the swap as one instant
+            wall = time.monotonic() - self._t0
+            self.timeline.append(Event(t0, "start", self._iter,
+                                       MIGRATION_TASK, epoch=new_epoch,
+                                       t_wall=wall, span=sp.id or None))
+            self.timeline.append(Event(t1, "end", self._iter,
+                                       MIGRATION_TASK, epoch=new_epoch,
+                                       t_wall=wall, span=sp.id or None))
+            ctx = self._make_context(plan, topo, epoch=new_epoch,
+                                     start_iter=self._iter)
+            for d in ctx.dev_free:
+                ctx.dev_free[d] = t1
+            self._sync_done = max(self._sync_done, t1)
+            dropped = 0
+            if not carry_pending:
+                dropped = int(self.pipeline.drain() is not None)
+            self.ctx_history.append(old)
+            self.ctx = ctx
+            self.topology_stale = False  # the new plan fits its topology
+            sp.set("transition_cost_s", trans_s)
+        obs_metrics.counter("engine.swaps").inc()
+        obs_metrics.gauge("engine.plan_epoch").set(new_epoch)
         return {"transition_cost_s": trans_s, "epoch": float(new_epoch),
                 "migration_start_s": t0, "migration_end_s": t1,
                 "dropped_bundles": float(dropped)}
@@ -236,16 +256,22 @@ class Engine:
         return list(lanes.values())
 
     def _run_stage(self, stage: Sequence[int], bb: Dict[str, Any],
-                   durations: Dict[int, float]) -> None:
+                   durations: Dict[int, float],
+                   meta: Dict[int, tuple]) -> None:
         def run_lane(lane: List[int]) -> None:
             for t in lane:
                 task = self.wf.task(t)
                 fn = tasks_mod.executor_for(task)
-                t0 = time.monotonic()
-                out = fn(self.state, bb, self.placements[t])
-                if out is not None:
-                    jax.block_until_ready(out)
-                durations[t] = time.monotonic() - t0
+                with obs_trace.span(f"task.{task.name}", task=t,
+                                    iteration=self._iter,
+                                    epoch=self.ctx.epoch) as sp:
+                    t0 = time.monotonic()
+                    out = fn(self.state, bb, self.placements[t])
+                    if out is not None:
+                        jax.block_until_ready(out)
+                    t1 = time.monotonic()
+                durations[t] = t1 - t0
+                meta[t] = (t0 - self._t0, sp.id)
 
         lanes = self._lanes(stage)
         if len(lanes) == 1:
@@ -257,9 +283,14 @@ class Engine:
 
     # -- measured-timeline replay --------------------------------------
     def _replay_iteration(self, durations: Dict[int, float],
-                          sync_dur: float, trained: bool) -> List[Event]:
+                          sync_dur: float, trained: bool,
+                          meta: Optional[Dict[int, tuple]] = None
+                          ) -> List[Event]:
         """Replay measured durations through the simulator's scheduling
-        rules on the plan's device ids (same event ordering semantics)."""
+        rules on the plan's device ids (same event ordering semantics).
+        ``meta`` carries each task's host wall-clock start (relative to
+        engine construction) and obs.trace span id, stamped onto the
+        replayed events for calibration/trace correlation."""
         it = self._iter
         epoch = self.ctx.epoch
         events: List[Event] = []
@@ -274,8 +305,12 @@ class Engine:
             end = start + durations[t]
             for d in devs:
                 self._dev_free[d] = end
-            events.append(Event(start, "start", it, t, epoch=epoch))
-            events.append(Event(end, "end", it, t, epoch=epoch))
+            wall0, sid = (meta or {}).get(t, (None, 0))
+            wall1 = wall0 + durations[t] if wall0 is not None else None
+            events.append(Event(start, "start", it, t, epoch=epoch,
+                                t_wall=wall0, span=sid or None))
+            events.append(Event(end, "end", it, t, epoch=epoch,
+                                t_wall=wall1, span=sid or None))
             self._done_at[(it, t)] = end
         if trained:
             train_end = self._done_at[(it, self._actor_train)]
@@ -296,10 +331,26 @@ class Engine:
 
     # -- one iteration --------------------------------------------------
     def run_iteration(self, prompts, answers, rng) -> EngineResult:
+        t_iter0 = time.monotonic()
+        with obs_trace.span("engine.iteration", iteration=self._iter,
+                            epoch=self.ctx.epoch):
+            result = self._run_iteration(prompts, answers, rng)
+        obs_metrics.histogram("engine.iter_wall_s").observe(
+            time.monotonic() - t_iter0)
+        obs_metrics.gauge("engine.plan_epoch").set(self.ctx.epoch)
+        if self.pipeline.records:
+            rec = self.pipeline.records[-1]
+            obs_metrics.gauge("engine.staleness").set(
+                rec.weight_version - rec.gen_version)
+        self._observe_divergence(result)
+        return result
+
+    def _run_iteration(self, prompts, answers, rng) -> EngineResult:
         bb: Dict[str, Any] = {"lock": threading.Lock(), "metrics": {}}
         bb.update(self.state.prepare_inputs(prompts, answers, rng))
         self._samples = int(bb["prompts_rep"].shape[0])
         durations: Dict[int, float] = {}
+        meta: Dict[int, tuple] = {}
         before_stage = getattr(self.state, "before_stage", None)
         for stage in self.wf.stages():
             has_gen = any(self.wf.task(t).kind == TaskKind.GEN
@@ -308,14 +359,16 @@ class Engine:
                 # shared cross-task prep (e.g. advantages) runs outside
                 # the per-task timers so lane measurements stay honest
                 before_stage([self.wf.task(t) for t in stage], bb)
-            self._run_stage(stage, bb, durations)
+            with obs_trace.span("engine.stage", tasks=len(stage)):
+                self._run_stage(stage, bb, durations, meta)
             if has_gen:
                 self._record_gen_stats(bb)
                 bundle = self.pipeline.push(bb.pop("fresh"))
                 if bundle is None:
                     # pipeline fill: nothing to train on yet, no sync
                     events = self._replay_iteration(durations, 0.0,
-                                                    trained=False)
+                                                    trained=False,
+                                                    meta=meta)
                     return EngineResult(self.state.fill_metrics(), events,
                                         self._iter - 1, self.ctx.epoch)
                 bb["bundle"] = bundle
@@ -323,14 +376,59 @@ class Engine:
                                      self.state.weight_version)
 
         t0 = time.monotonic()
-        nbytes = sync_actor_weights(self.state,
-                                    self.placements[self._gen_task])
-        jax.block_until_ready(self.state.gen_params)
+        with obs_trace.span("engine.sync", iteration=self._iter):
+            nbytes = sync_actor_weights(self.state,
+                                        self.placements[self._gen_task])
+            jax.block_until_ready(self.state.gen_params)
         sync_dur = time.monotonic() - t0
+        self.sync_durations.append(sync_dur)
+        obs_metrics.histogram("engine.sync_s").observe(sync_dur)
         metrics = dict(bb["metrics"])
         metrics["sync_gb"] = nbytes / 1e9
-        events = self._replay_iteration(durations, sync_dur, trained=True)
+        events = self._replay_iteration(durations, sync_dur, trained=True,
+                                        meta=meta)
         return EngineResult(metrics, events, self._iter - 1, self.ctx.epoch)
+
+    # -- reactive drift hook ---------------------------------------------
+    def attach_divergence_monitor(self, monitor,
+                                  cost_model=None) -> None:
+        """Feed every iteration's measured vs predicted task durations
+        into an ``obs.calibrate.DivergenceMonitor``.  ``cost_model`` may
+        be a ``CostModel`` instance or an ``obs.calibrate.Calibration``
+        (rebuilt against the live topology at each plan epoch); omitted,
+        the uncalibrated analytical model is used — only meaningful if
+        the monitor's threshold accounts for the wall-clock offset."""
+        self.divergence_monitor = monitor
+        self._div_cost_model = cost_model
+        self._pred_cache = None
+
+    def _observe_divergence(self, result: EngineResult) -> None:
+        mon = self.divergence_monitor
+        if mon is None or self.topo is None or self.topology_stale:
+            return
+        if self._pred_cache is None \
+                or self._pred_cache[0] != self.ctx.epoch:
+            src = self._div_cost_model
+            if src is None:
+                cm = CostModel(self.topo, self.wf)
+            elif hasattr(src, "cost_model"):     # a Calibration
+                cm = src.cost_model(self.topo, self.wf)
+            else:
+                cm = src
+            self._pred_cache = (
+                self.ctx.epoch,
+                {t: cm.task_cost(self.plan, t).total
+                 for t in range(self.wf.n_tasks)})
+        starts: Dict[int, float] = {}
+        measured: Dict[int, float] = {}
+        for e in result.events:
+            if e.task < 0:
+                continue
+            if e.kind == "start":
+                starts[e.task] = e.time
+            elif e.kind == "end" and e.task in starts:
+                measured[e.task] = e.time - starts.pop(e.task)
+        mon.observe_iteration(measured, self._pred_cache[1])
 
     # -- decode-wave telemetry -------------------------------------------
     def _record_gen_stats(self, bb: Dict[str, Any]) -> None:

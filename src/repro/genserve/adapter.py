@@ -56,7 +56,7 @@ def wave_stats_from_mask(mask, wave: Optional[int] = None
             "prefill_trace": [], "prefill_rounds": 0,
             "prefill_slot_steps": 0, "prefill_chunk": 0,
             "prefill_rounds_per_req": 0.0,
-            "max_new_tokens": int(N), "ttft": {},
+            "max_new_tokens": int(N), "ttft": {}, "queue_wait": {},
             "rounds": [], "prefills": 1, "admitted": B, "retired": B}
 
 

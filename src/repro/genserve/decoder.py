@@ -125,6 +125,8 @@ import numpy as np
 
 from repro.genserve.pagepool import PagePool, RadixCache
 from repro.genserve.scheduler import FREE, Request, RequestQueue, SlotTable
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.models import attention as attn_mod
 from repro.models import cache as cache_mod
 from repro.models import sampling
@@ -582,6 +584,7 @@ def serve(params, cfg: ModelConfig, prompts, rng, gcfg: GenServeConfig,
     next_key = 0
     rounds: List[Tuple[float, float, float, int]] = []
     ttft: Dict[int, float] = {}
+    queue_wait: Dict[int, float] = {}    # request admission wait (host)
     n_prefills = 0
     round_idx = 0
     occupied = np.zeros((W,), bool)      # device occupancy, host view
@@ -595,11 +598,19 @@ def serve(params, cfg: ModelConfig, prompts, rng, gcfg: GenServeConfig,
         assert round_idx <= 2 * B * (N + 1) + B * (nchunks + 1), \
             "genserve loop did not converge"
         t0 = time.monotonic()
+        # span opened/closed manually: the loop body stays un-indented
+        # (an aborted round is simply not recorded)
+        rspan = obs_trace.span("gen.round", round=round_idx)
+        rspan.__enter__()
+        obs_metrics.gauge("gen.queue_depth").set(len(queue))
         admitted = 0
         may_live = False
         reqs: List[Request] = []
         free = table.free_slots()
         if free and len(queue):
+            aspan = obs_trace.span("gen.install" if chunked
+                                   else "gen.admit")
+            aspan.__enter__()
             reqs = queue.pop(len(free))
             slots = free[:len(reqs)]
             pb = np.broadcast_to(prompts_np[reqs[0].rid],
@@ -700,6 +711,11 @@ def serve(params, cfg: ModelConfig, prompts, rng, gcfg: GenServeConfig,
             table.admit(slots, reqs)
             n_prefills += 1
             admitted = len(reqs)
+            now_adm = time.monotonic()
+            for rq in reqs:
+                queue_wait[rq.rid] = now_adm - t_start
+            aspan.set("admitted", admitted)
+            aspan.__exit__(None, None, None)
 
         counts = ()
         if chunked and prefill_left.any():
@@ -742,8 +758,9 @@ def serve(params, cfg: ModelConfig, prompts, rng, gcfg: GenServeConfig,
                 else jax.random.fold_in(side_admit,
                                         round_idx * (K + 1) + j)
                 for j in range(k_len)])
-            state, (d, p) = mixed_fn(params, state, keys, k_lands)
-            counts = np.asarray(d)
+            with obs_trace.span("gen.mixed", subrounds=k_len):
+                state, (d, p) = mixed_fn(params, state, keys, k_lands)
+                counts = np.asarray(d)         # device sync
             table.record_round(counts, np.asarray(p))
             occupied = np.asarray(state["occupied"])
             landed = (prefill_left > 0) & (prefill_left <= k_len)
@@ -769,9 +786,10 @@ def serve(params, cfg: ModelConfig, prompts, rng, gcfg: GenServeConfig,
             keys = jnp.stack(
                 [rngs[i] if i < N else jax.random.fold_in(side_step, i)
                  for i in range(next_key, next_key + K)])
-            state, counts = chunk_fn(params, state, keys)
+            with obs_trace.span("gen.decode", steps=K):
+                state, counts = chunk_fn(params, state, keys)
+                counts = np.asarray(counts)    # device sync
             next_key += K
-            counts = np.asarray(counts)
             table.record_step(counts)
             occupied = np.asarray(state["occupied"])
 
@@ -789,6 +807,8 @@ def serve(params, cfg: ModelConfig, prompts, rng, gcfg: GenServeConfig,
         t1 = time.monotonic()
         occ = float(np.mean(counts)) if len(counts) else 0.0
         rounds.append((t0, t1, occ, admitted))
+        rspan.set("occupancy", occ)
+        rspan.__exit__(None, None, None)
 
     gen = np.asarray(state["gen"])[:B]
     lp = np.asarray(state["lp"])[:B]
@@ -811,14 +831,33 @@ def serve(params, cfg: ModelConfig, prompts, rng, gcfg: GenServeConfig,
              "max_new_tokens": N,
              "prefill_rounds_per_req":
                  float(np.mean(np.ceil(plens_np / C))) if chunked else 0.0,
-             "ttft": ttft,
+             "ttft": ttft, "queue_wait": queue_wait,
              "rounds": rounds, "prefills": n_prefills,
              "admitted": table.admitted, "retired": table.retired,
              "page_size": ps, "prefix_cache": sharing,
              "prefix_hit_rate": table.prefix_hit_rate(),
              "prefill_tokens_skipped": table.prefix_hit_tokens,
              "prompt_tokens": table.prompt_tokens}
+    # registry metrics: one batch of updates per serve() call (the hot
+    # round loop only touches the queue-depth gauge)
+    obs_metrics.counter("gen.tokens").inc(table.slot_steps)
+    obs_metrics.counter("gen.requests").inc(table.retired)
+    obs_metrics.histogram("gen.wave_occupancy").observe(
+        table.mean_occupancy())
+    obs_metrics.counter("gen.prefix_hit_tokens").inc(table.prefix_hit_tokens)
+    obs_metrics.counter("gen.prompt_tokens").inc(table.prompt_tokens)
+    ttft_h = obs_metrics.histogram("gen.ttft_s")
+    for v in ttft.values():
+        ttft_h.observe(v)
+    qw_h = obs_metrics.histogram("gen.queue_wait_s")
+    for v in queue_wait.values():
+        qw_h.observe(v)
     if sharing:
+        # teardown invariants: every slot is retired, so remaining page
+        # references must be exactly the radix tree's — anything beyond
+        # is a leak (warned + counted; raises under REPRO_OBS_STRICT=1)
+        obs_metrics.gauge("pagepool.utilization").set(pool.utilization())
+        pool.leak_check(expected_refs=radix.page_refs())
         # debug/test handles (host-side structures, no device state)
         stats["_pagepool"] = pool
         stats["_radix"] = radix

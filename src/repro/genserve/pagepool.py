@@ -29,7 +29,11 @@ cursor after the shared prefix), at landing (insert) and at retirement
 """
 from __future__ import annotations
 
+import os
+import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.obs import metrics as obs_metrics
 
 
 class PagePool:
@@ -92,6 +96,43 @@ class PagePool:
             assert rc >= 0
             assert (rc == 0) == (p in seen), (
                 f"page {p}: refcount {rc} vs free-list {p in seen}")
+
+    # -- observability ---------------------------------------------------
+    def utilization(self) -> float:
+        """Fraction of pool pages currently referenced (live)."""
+        live = sum(1 for rc in self.refcount if rc > 0)
+        return live / self.n_pages
+
+    def stats(self) -> Dict[str, float]:
+        """Invariant-checked pool summary for metrics snapshots."""
+        self.check()
+        return {"n_pages": self.n_pages, "free": len(self._free),
+                "live": self.n_pages - len(self._free),
+                "utilization": self.utilization(),
+                "max_refcount": max(self.refcount, default=0)}
+
+    def leak_check(self, expected_refs: Optional[Dict[int, int]] = None
+                   ) -> List[int]:
+        """Shutdown leak assertion: with ``expected_refs`` (page ->
+        refcount the caller can account for — at decoder teardown, the
+        radix tree's node references), any page holding references
+        beyond them is a leak.  Leaks are counted into the
+        ``pagepool.leaked_pages`` metric and warned; under
+        ``REPRO_OBS_STRICT=1`` they raise instead.  Also verifies the
+        free-list invariant (``check``).  Returns the leaked page ids."""
+        self.check()
+        expected = expected_refs or {}
+        leaked = [p for p, rc in enumerate(self.refcount)
+                  if rc > expected.get(p, 0)]
+        if leaked:
+            obs_metrics.counter("pagepool.leaked_pages").inc(len(leaked))
+            msg = (f"page pool leak: {len(leaked)} page(s) hold "
+                   f"unaccounted references at teardown "
+                   f"(ids {leaked[:8]}{'...' if len(leaked) > 8 else ''})")
+            if os.environ.get("REPRO_OBS_STRICT") == "1":
+                raise RuntimeError(msg)
+            warnings.warn(msg, RuntimeWarning, stacklevel=2)
+        return leaked
 
 
 class _Node:
@@ -219,3 +260,17 @@ class RadixCache:
                     best = n
             stack.extend(n.children.values())
         return best
+
+    # -- observability ---------------------------------------------------
+    def page_refs(self) -> Dict[int, int]:
+        """page id -> number of references the tree holds on it (each
+        node owns exactly one).  At decoder teardown these are the only
+        references that should remain — ``PagePool.leak_check`` takes
+        this as its expected-refs baseline."""
+        refs: Dict[int, int] = {}
+        stack = list(self.root.children.values())
+        while stack:
+            n = stack.pop()
+            refs[n.page] = refs.get(n.page, 0) + 1
+            stack.extend(n.children.values())
+        return refs

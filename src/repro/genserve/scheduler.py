@@ -40,6 +40,8 @@ from typing import List, Sequence
 
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+
 FREE = -1
 
 
@@ -96,6 +98,11 @@ class RequestQueue:
             rest = [e for e in self._pending if e[1] < self.aging]
             order = starved + rest
             take = order[:n]
+            if len(order) > n:
+                obs_metrics.counter("gen.sjf_skips").inc(len(order) - n)
+            aged = sum(1 for e in take if e[1] >= self.aging)
+            if aged:
+                obs_metrics.counter("gen.sjf_aged_admissions").inc(aged)
             for e in order[n:]:
                 e[1] += 1
             taken = {id(e) for e in take}

@@ -36,6 +36,8 @@ from repro.genserve import adapter as genserve
 from repro.genserve.adapter import ttft_quantiles
 from repro.launch.mesh import make_host_mesh
 from repro.models import transformer as T
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.rl.rollout import SamplerConfig
 
 
@@ -70,7 +72,14 @@ def main():
     ap.add_argument("--expect-prefix-hits", action="store_true",
                     help="exit nonzero unless the prefix-cache token "
                          "hit rate is > 0 (CI smoke)")
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="write a Chrome-trace JSON of the serving run "
+                         "(view in Perfetto / chrome://tracing)")
+    ap.add_argument("--metrics", default=None, metavar="FILE",
+                    help="dump the metrics-registry snapshot as JSON")
     args = ap.parse_args()
+    if args.trace:
+        obs_trace.enable()
     if args.prefix_cache and args.page_size == 0:
         args.page_size = 8
     if args.page_size and args.prefill_chunk == 0:
@@ -105,6 +114,7 @@ def main():
         ro, stats = gen()   # timed run is uninstrumented (TTFT stamping
         jax.block_until_ready(ro["sequences"])   # syncs admission)
         dt = time.time() - t0
+        obs_metrics.reset()   # quantiles below describe this run only
         _, ttft_stats = gen(measure_ttft=True)
     valid = float(jnp.sum(ro["mask"]))
     hit = float(stats.get("prefix_hit_rate", 0.0))
@@ -126,7 +136,16 @@ def main():
           f"({valid / dt:.1f} valid tok/s; {stats['decode_steps']} decode "
           f"rounds, {stats['prefills']} prefill injections, "
           f"{stats.get('prefill_rounds', 0)} prefill-chunk rounds)")
-    print(f"ttft p50={p50 * 1e3:.1f}ms p95={p95 * 1e3:.1f}ms")
+    snap = obs_metrics.snapshot()
+    ttft_h = snap.get("gen.ttft_s") or {}
+    qw = snap.get("gen.queue_wait_s") or {}
+    print(f"ttft p50={p50 * 1e3:.1f}ms p95={p95 * 1e3:.1f}ms "
+          f"p99={ttft_h.get('p99', 0.0) * 1e3:.1f}ms")
+    if qw.get("count"):
+        print(f"queue wait p50={qw['p50'] * 1e3:.1f}ms "
+              f"p95={qw['p95'] * 1e3:.1f}ms "
+              f"p99={qw['p99'] * 1e3:.1f}ms "
+              f"(n={qw['count']})")
     if args.prefix_cache:
         print(f"prefix cache: {hit:.1%} token hit rate "
               f"({stats['prefill_tokens_skipped']} of "
@@ -139,6 +158,12 @@ def main():
         print(f"mean wave occupancy: {stats['mean_occupancy']:.2f} "
               f"(cost-model ideal {ideal:.2f})")
     print("sample:", ro["sequences"][0, :24].tolist())
+    if args.trace:
+        obs_trace.export_chrome(args.trace)
+        print(f"trace -> {args.trace}")
+    if args.metrics:
+        obs_metrics.dump(args.metrics)
+        print(f"metrics snapshot -> {args.metrics}")
     if args.expect_prefix_hits and hit <= 0.0:
         raise SystemExit("expected a nonzero prefix-cache hit rate "
                          f"(got {hit}) — shared-prompt trace not hitting")

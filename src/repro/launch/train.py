@@ -36,6 +36,7 @@ from repro.data.synthetic import random_lm_batch
 from repro.launch import steps as steps_mod
 from repro.launch.mesh import make_host_mesh
 from repro.models import transformer as T
+from repro.obs import trace as obs_trace
 from repro.optim import adam
 
 
@@ -135,6 +136,13 @@ def run_rl(args) -> None:
     print(f"measured {cmp['measured_iter_s'] * 1e3:.1f}ms/iter vs "
           f"cost-model {cmp['predicted_iter_s'] * 1e3:.3f}ms/iter "
           f"(ratio {cmp['ratio']:.2f})")
+    if args.calibrate:
+        from repro.obs import calibrate as obs_cal
+        c = obs_cal.fit_from_engine(trainer.engine)
+        ccmp = trainer.engine.compare_with_simulator(
+            cost_model=c.cost_model(trainer.engine.topo, trainer.wf))
+        print(f"calibrated ({c.n_samples} samples, global scale "
+              f"{c.global_scale:.3g}): ratio {ccmp['ratio']:.2f}")
     print("done")
 
 
@@ -161,10 +169,22 @@ def main():
                          "core.topology.DRIFT_SCENARIOS")
     ap.add_argument("--drift-at", type=int, default=None,
                     help="iteration the drift fires at (default steps//2)")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="fit cost-model calibration from the measured "
+                         "timeline and report the corrected measured-vs-"
+                         "predicted ratio (with --rl)")
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="write a Chrome-trace JSON of the run "
+                         "(view in Perfetto / chrome://tracing)")
     args = ap.parse_args()
+    if args.trace:
+        obs_trace.enable()
 
     if args.rl:
         run_rl(args)
+        if args.trace:
+            obs_trace.export_chrome(args.trace)
+            print(f"trace -> {args.trace}")
         return
 
     cfg = archs.get(args.arch, smoke=args.smoke)
@@ -183,11 +203,16 @@ def main():
             key, k = jax.random.split(key)
             batch = make_batch(cfg, k, args.batch, args.seq)
             t0 = time.time()
-            params, opt_state, metrics = train_step(params, opt_state, batch)
-            loss = float(metrics["loss"])
+            with obs_trace.span("train.step", step=step):
+                params, opt_state, metrics = train_step(params, opt_state,
+                                                        batch)
+                loss = float(metrics["loss"])
             dt = time.time() - t0
             print(f"step {step:4d} loss={loss:.4f} "
                   f"gnorm={float(metrics['grad_norm']):.3f} ({dt:.2f}s)")
+    if args.trace:
+        obs_trace.export_chrome(args.trace)
+        print(f"trace -> {args.trace}")
     print("done")
 
 

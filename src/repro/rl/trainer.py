@@ -28,6 +28,7 @@ from repro.data.synthetic import AdditionTask, EOS
 from repro.engine.executor import Engine
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
+from repro.obs import trace as obs_trace
 from repro.optim import adam
 from repro.rl import gae, losses, rewards as rewards_mod, rollout
 
@@ -248,7 +249,8 @@ class RLTrainer:
         barrier).  Asynchronous: generate with the PREVIOUS sync's weights
         while training on the PREVIOUS iteration's rollouts (one-step
         off-policy); the first call only produces rollouts."""
-        res = self.engine.run_iteration(prompts, answers, rng)
+        with obs_trace.span("train.step", batch=int(prompts.shape[0])):
+            res = self.engine.run_iteration(prompts, answers, rng)
         return res.metrics
 
     # ------------------------------------------------------------------

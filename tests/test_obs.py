@@ -1,0 +1,487 @@
+"""Observability layer tests (``repro.obs``).
+
+- span tracer: nesting, exception safety, disabled no-op path;
+- Chrome-trace export round-trip: valid JSON, per-thread monotonic
+  timestamps, matched B/E nesting (``validate_chrome`` both accepts the
+  export and rejects corrupted traces);
+- metrics registry: counter/gauge/histogram snapshot correctness,
+  quantiles on known data, type-collision detection;
+- calibration: fitting a known scale factor back out of a synthetic
+  Event timeline, CalibratedCostModel plugging into ``simulate``;
+- divergence monitor: sustained drift fires the latch once, stable
+  ratios never do;
+- page-pool leak accounting: radix-held references are expected at
+  teardown, anything else warns (or raises under REPRO_OBS_STRICT=1);
+- hygiene: no bare ``print(`` in library code (launchers exempt);
+- end-to-end: a traced engine run + plan swap + genserve generation
+  emits a schema-valid trace covering iterations, decode waves and the
+  swap.
+"""
+import json
+import math
+import os
+import re
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import enumerate as enum_mod, topology, workflow
+from repro.core.costmodel import CostModel
+from repro.core.simulator import Event, simulate
+from repro.data.synthetic import AdditionTask, VOCAB_SIZE
+from repro.genserve.pagepool import PagePool, RadixCache
+from repro.models.config import ModelConfig
+from repro.obs import calibrate as obs_cal
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.rl.trainer import RLConfig, RLTrainer
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs():
+    """Every test starts and ends with tracing off and empty stores."""
+    obs_trace.disable()
+    obs_trace.reset()
+    obs_metrics.reset()
+    yield
+    obs_trace.disable()
+    obs_trace.reset()
+    obs_metrics.reset()
+
+
+# ---------------------------------------------------------------------------
+# span tracer
+# ---------------------------------------------------------------------------
+
+def test_span_nesting_records_parent_ids():
+    tr = obs_trace.Tracer(enabled=True)
+    with tr.span("a") as a:
+        with tr.span("a.b") as b:
+            assert tr.current_span_id() == b.id
+            with tr.span("a.b.c"):
+                pass
+        with tr.span("a.d"):
+            pass
+    events = tr.chrome_events()
+    begins = {e["name"]: e for e in events if e["ph"] == "B"}
+    assert set(begins) == {"a", "a.b", "a.b.c", "a.d"}
+    assert "parent_id" not in begins["a"]["args"]
+    assert begins["a.b"]["args"]["parent_id"] == a.id
+    assert begins["a.b.c"]["args"]["parent_id"] == b.id
+    assert begins["a.d"]["args"]["parent_id"] == a.id
+    # B/E sequence ordering reproduces the push/pop interleaving
+    order = [(e["name"], e["ph"]) for e in events]
+    assert order == [("a", "B"), ("a.b", "B"), ("a.b.c", "B"),
+                     ("a.b.c", "E"), ("a.b", "E"), ("a.d", "B"),
+                     ("a.d", "E"), ("a", "E")]
+
+
+def test_span_exception_safety():
+    tr = obs_trace.Tracer(enabled=True)
+    with pytest.raises(ValueError):
+        with tr.span("outer"):
+            with tr.span("inner"):
+                raise ValueError("boom")
+    events = tr.chrome_events()
+    assert obs_trace.validate_chrome({"traceEvents": events}) == []
+    begins = {e["name"]: e for e in events if e["ph"] == "B"}
+    assert begins["inner"]["args"]["error"] == "ValueError"
+    assert begins["outer"]["args"]["error"] == "ValueError"
+    # the stack fully unwound: a new span nests under nothing
+    with tr.span("later"):
+        pass
+    later = [e for e in tr.chrome_events()
+             if e["name"] == "later" and e["ph"] == "B"]
+    assert "parent_id" not in later[0]["args"]
+
+
+def test_span_leaked_child_is_popped():
+    """A child span abandoned without __exit__ (manual-open idiom gone
+    wrong) must not corrupt the parent's stack."""
+    tr = obs_trace.Tracer(enabled=True)
+    with tr.span("parent"):
+        leaked = tr.span("leaked")
+        leaked.__enter__()             # never exited
+    assert tr.current_span_id() == 0
+    with tr.span("after"):
+        pass
+    after = [e for e in tr.chrome_events()
+             if e["name"] == "after" and e["ph"] == "B"]
+    assert "parent_id" not in after[0]["args"]
+
+
+def test_disabled_tracer_is_noop():
+    tr = obs_trace.Tracer(enabled=False)
+    sp = tr.span("x", a=1)
+    assert sp is tr.span("y")          # shared null span, no allocation
+    with sp:
+        sp.set("k", "v")
+    assert tr.n_spans() == 0
+    assert tr.current_span_id() == 0
+
+
+def test_module_singleton_env_flag_roundtrip(tmp_path):
+    obs_trace.enable()
+    assert obs_trace.is_enabled()
+    with obs_trace.span("m.root"):
+        with obs_trace.span("m.leaf", n=3):
+            pass
+    path = obs_trace.export_chrome(str(tmp_path / "t.json"))
+    assert obs_trace.validate_file(path) == []
+    rep = obs_trace.report()
+    assert "m.root" in rep and "m.leaf" in rep
+
+
+# ---------------------------------------------------------------------------
+# chrome export / validation
+# ---------------------------------------------------------------------------
+
+def test_chrome_export_roundtrip(tmp_path):
+    tr = obs_trace.Tracer(enabled=True)
+    for i in range(5):
+        with tr.span("loop.iter", i=i):
+            with tr.span("loop.work"):
+                pass
+    path = str(tmp_path / "trace.json")
+    tr.export_chrome(path)
+    with open(path) as f:
+        obj = json.load(f)
+    events = obj["traceEvents"]
+    assert len(events) == 20           # 10 spans x B/E
+    assert obs_trace.validate_chrome(obj) == []
+    # timestamps non-decreasing (single thread) and microsecond-scaled
+    ts = [e["ts"] for e in events]
+    assert ts == sorted(ts)
+    for e in events:
+        assert e["ph"] in ("B", "E")
+        assert {"name", "cat", "pid", "tid", "ts"} <= set(e)
+    # CLI validator agrees
+    from repro.obs.trace import _main
+    assert _main([path]) == 0
+
+
+def test_validate_chrome_rejects_corruption():
+    tr = obs_trace.Tracer(enabled=True)
+    with tr.span("ok"):
+        pass
+    good = tr.chrome_events()
+    assert obs_trace.validate_chrome(good) == []
+    # unmatched B
+    assert obs_trace.validate_chrome(good[:1]) != []
+    # E without B
+    assert obs_trace.validate_chrome(good[1:]) != []
+    # missing required field
+    bad = [dict(good[0]), dict(good[1])]
+    del bad[0]["ts"]
+    assert obs_trace.validate_chrome(bad) != []
+    # name mismatch on the close
+    bad2 = [dict(good[0]), dict(good[1], name="other")]
+    assert obs_trace.validate_chrome(bad2) != []
+    # non-monotonic timestamps within a thread
+    bad3 = [dict(good[0], ts=5.0), dict(good[1], ts=1.0)]
+    assert obs_trace.validate_chrome(bad3) != []
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+def test_metrics_snapshot_correctness():
+    obs_metrics.counter("t.count").inc()
+    obs_metrics.counter("t.count").inc(4)
+    obs_metrics.gauge("t.gauge").set(2.5)
+    h = obs_metrics.histogram("t.hist")
+    for v in range(1, 101):
+        h.observe(float(v))
+    snap = obs_metrics.snapshot()
+    assert snap["t.count"] == 5
+    assert snap["t.gauge"] == 2.5
+    hs = snap["t.hist"]
+    assert hs["count"] == 100
+    assert hs["sum"] == pytest.approx(5050.0)
+    assert hs["min"] == 1.0 and hs["max"] == 100.0
+    assert hs["mean"] == pytest.approx(50.5)
+    assert hs["p50"] == pytest.approx(50.5, abs=1.0)
+    assert hs["p95"] == pytest.approx(95.05, abs=1.0)
+    assert hs["p99"] == pytest.approx(99.01, abs=1.0)
+
+
+def test_metrics_type_collision_and_reset(tmp_path):
+    obs_metrics.counter("t.name")
+    with pytest.raises(TypeError):
+        obs_metrics.gauge("t.name")
+    path = str(tmp_path / "m.json")
+    obs_metrics.counter("t.name").inc(3)
+    obs_metrics.dump(path)
+    with open(path) as f:
+        assert json.load(f)["t.name"] == 3
+    obs_metrics.reset()
+    assert obs_metrics.snapshot() == {}
+
+
+# ---------------------------------------------------------------------------
+# calibration
+# ---------------------------------------------------------------------------
+
+def _tiny_setup():
+    cfg = ModelConfig(name="obs-cal-t", n_layers=1, d_model=32, n_heads=2,
+                      n_kv_heads=2, d_ff=64, vocab_size=VOCAB_SIZE,
+                      dtype="float32")
+    spec = workflow.LLMSpec.from_model_config(cfg)
+    wf = workflow.make_workflow("grpo", spec, synchronous=True,
+                                n_rollouts=2, seq_in=8, seq_out=4,
+                                global_batch=1)
+    topo = topology.build_testbed("single_region",
+                                  counts={"A100": 2, "L4": 2})
+    grouping = (tuple(range(wf.n_tasks)),)
+    plan = enum_mod.build_plan(topo, wf, grouping, [topo.n],
+                               list(range(topo.n)))
+    return topo, wf, plan
+
+
+def _synthetic_timeline(cm, plan, wf, scale, n_iters):
+    """Events whose durations are exactly scale x the predicted cost."""
+    events, t = [], 0.0
+    for it in range(n_iters):
+        for task in range(wf.n_tasks):
+            dur = cm.task_cost(plan, task).total * scale
+            events.append(Event(t, "start", it, task))
+            events.append(Event(t + dur, "end", it, task))
+            t += dur
+    return events
+
+
+def test_calibration_recovers_known_scale():
+    topo, wf, plan = _tiny_setup()
+    cm = CostModel(topo, wf)
+    scale = 250.0
+    timeline = _synthetic_timeline(cm, plan, wf, scale, n_iters=3)
+    cal = obs_cal.fit_calibration(topo, wf, plan, timeline,
+                                  skip_iterations=1)
+    assert cal.global_scale == pytest.approx(scale, rel=1e-6)
+    assert cal.n_samples == 2 * wf.n_tasks
+    for cls_scale in cal.class_scale.values():
+        assert cls_scale == pytest.approx(scale, rel=1e-6)
+    # unmeasured classes fall back to the global scale
+    assert cal.scale_for("no-such-class") == pytest.approx(scale)
+    # fit published the calib.* gauges
+    snap = obs_metrics.snapshot()
+    assert snap["calib.global_scale"] == pytest.approx(scale)
+
+
+def test_calibrated_cost_model_scales_simulation():
+    topo, wf, plan = _tiny_setup()
+    cm = CostModel(topo, wf)
+    scale = 100.0
+    timeline = _synthetic_timeline(cm, plan, wf, scale, n_iters=3)
+    cal = obs_cal.fit_calibration(topo, wf, plan, timeline,
+                                  skip_iterations=1)
+    base = simulate(topo, wf, plan, n_iterations=4)
+    calibrated = simulate(topo, wf, plan, n_iterations=4,
+                          cost_model=cal.cost_model(topo, wf))
+    ratio = calibrated.iteration_time / base.iteration_time
+    # tasks scale by exactly 100x; sync scales by sync_scale (the global
+    # fallback here), so the end-to-end iteration scales ~100x
+    assert ratio == pytest.approx(scale, rel=0.05)
+
+
+def test_skip_iterations_drops_warmup():
+    topo, wf, plan = _tiny_setup()
+    cm = CostModel(topo, wf)
+    # iteration 0 is 1000x (jit compile), the rest are 10x
+    warm = _synthetic_timeline(cm, plan, wf, 1000.0, n_iters=1)
+    rest = [Event(e.time, e.kind, e.iteration + 1, e.task)
+            for e in _synthetic_timeline(cm, plan, wf, 10.0, n_iters=2)]
+    cal = obs_cal.fit_calibration(topo, wf, plan, warm + rest,
+                                  skip_iterations=1)
+    assert cal.global_scale == pytest.approx(10.0, rel=1e-6)
+
+
+def test_divergence_monitor_fires_on_sustained_drift():
+    mon = obs_cal.DivergenceMonitor(threshold=3.0, sustain=3, alpha=1.0)
+    # stable: ratios hover around 1 -> no fire
+    for _ in range(10):
+        mon.observe(0, 1.1, 1.0)
+    assert not mon.consume() and mon.drifted_tasks() == []
+    # drifted: 10x sustained -> fires exactly once at the sustain mark
+    fired_at = None
+    for i in range(6):
+        if mon.observe(1, 10.0, 1.0):
+            fired_at = i
+            break
+    assert fired_at == 2               # third consecutive observation
+    assert mon.drifted_tasks() == [1]
+    assert mon.ratio(1) == pytest.approx(10.0)
+    assert mon.consume()               # latch reads once...
+    assert not mon.consume()           # ...and clears
+    # already-drifted tasks do not re-fire while they stay drifted
+    assert not mon.observe(1, 10.0, 1.0)
+    assert obs_metrics.snapshot()["elastic.drift_events"] == 1
+
+
+def test_divergence_monitor_recovers():
+    mon = obs_cal.DivergenceMonitor(threshold=2.0, sustain=2, alpha=1.0)
+    for _ in range(2):
+        mon.observe(0, 8.0, 1.0)
+    assert mon.drifted_tasks() == [0]
+    mon.observe(0, 1.0, 1.0)           # back in band -> streak resets
+    assert mon.drifted_tasks() == []
+
+
+# ---------------------------------------------------------------------------
+# page-pool leak accounting
+# ---------------------------------------------------------------------------
+
+def test_pagepool_leak_check():
+    pool = PagePool(n_pages=8, page_size=4)
+    radix = RadixCache(pool)
+    pages = pool.alloc(2)
+    radix.insert(list(range(8)), pages)    # tree holds one ref per page
+    pool.decref(pages)                     # slot retires its refs
+    # everything accounted for: tree refs are expected at teardown
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert pool.leak_check(expected_refs=radix.page_refs()) == []
+    # an unaccounted page -> warn + metric
+    leak = pool.alloc(1)
+    with pytest.warns(RuntimeWarning, match="leak"):
+        leaked = pool.leak_check(expected_refs=radix.page_refs())
+    assert leaked == leak
+    assert obs_metrics.snapshot()["pagepool.leaked_pages"] == 1
+
+
+def test_pagepool_leak_check_strict_raises(monkeypatch):
+    monkeypatch.setenv("REPRO_OBS_STRICT", "1")
+    pool = PagePool(n_pages=4, page_size=2)
+    pool.alloc(1)
+    with pytest.raises(RuntimeError, match="leak"):
+        pool.leak_check()
+
+
+def test_pagepool_stats_utilization():
+    pool = PagePool(n_pages=10, page_size=2)
+    assert pool.utilization() == 0.0
+    pages = pool.alloc(3)
+    s = pool.stats()
+    assert s["live"] == 3 and s["free"] == 7
+    assert s["utilization"] == pytest.approx(0.3)
+    pool.decref(pages)
+    assert pool.utilization() == 0.0
+
+
+# ---------------------------------------------------------------------------
+# hygiene: no bare print in library code
+# ---------------------------------------------------------------------------
+
+def test_no_bare_print_in_library_code():
+    """Library modules report through ``repro.obs`` (or logging), never
+    bare ``print`` — launchers are the human-facing CLI surface and are
+    exempt."""
+    root = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
+    offenders = []
+    pat = re.compile(r"(?<![\w.])print\(")
+    for dirpath, _dirs, files in os.walk(root):
+        if os.path.basename(dirpath) == "launch":
+            continue
+        for fname in files:
+            if not fname.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fname)
+            with open(path) as f:
+                for lineno, line in enumerate(f, 1):
+                    code = line.split("#", 1)[0]
+                    if pat.search(code):
+                        rel = os.path.relpath(path, root)
+                        offenders.append(f"{rel}:{lineno}")
+    assert not offenders, \
+        f"bare print( in library code: {offenders}"
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: traced engine + genserve + plan swap
+# ---------------------------------------------------------------------------
+
+def _e2e_trainer():
+    cfg = ModelConfig(name="obs-e2e", n_layers=1, d_model=32, n_heads=2,
+                      n_kv_heads=2, d_ff=64, vocab_size=VOCAB_SIZE,
+                      dtype="float32")
+    task = AdditionTask(max_operand=9)
+    topo = topology.build_testbed("single_region",
+                                  counts={"A100": 2, "L4": 2})
+    spec = workflow.LLMSpec.from_model_config(cfg)
+    wf = workflow.make_workflow("grpo", spec, synchronous=True,
+                                n_rollouts=2, seq_in=task.prompt_len,
+                                seq_out=4, global_batch=1)
+    grouping = (tuple(range(wf.n_tasks)),)
+    plan = enum_mod.build_plan(topo, wf, grouping, [topo.n],
+                               list(range(topo.n)))
+    rl = RLConfig(algorithm="grpo", n_rollouts=2, max_new_tokens=4,
+                  gen_engine="genserve")
+    return RLTrainer(cfg, rl, task, KEY, plan=plan, topo=topo, wf=wf), \
+        topo, wf, plan
+
+
+def test_e2e_trace_covers_engine_waves_and_swap(tmp_path):
+    obs_trace.enable()
+    trainer, topo, wf, plan = _e2e_trainer()
+    rng = np.random.default_rng(0)
+    key = jax.random.PRNGKey(7)
+    for _ in range(2):
+        prompts, answers = trainer.task.sample_batch(rng, 2)
+        key, k = jax.random.split(key)
+        trainer.iteration(prompts, answers, k)
+    # swap to a structurally identical plan: epoch bumps, span records
+    plan2 = enum_mod.build_plan(topo, wf, (tuple(range(wf.n_tasks)),),
+                                [topo.n], list(range(topo.n)))
+    trainer.engine.apply_plan(plan2, topo=topo)
+    prompts, answers = trainer.task.sample_batch(rng, 2)
+    trainer.iteration(prompts, answers, jax.random.PRNGKey(9))
+
+    path = str(tmp_path / "e2e.json")
+    obs_trace.export_chrome(path)
+    assert obs_trace.validate_file(path) == []
+    with open(path) as f:
+        events = json.load(f)["traceEvents"]
+    names = {e["name"] for e in events}
+    assert {"train.step", "engine.iteration", "engine.stage",
+            "engine.sync", "engine.swap",
+            "task.actor_generation"} <= names
+    assert any(n.startswith("gen.") for n in names), names
+
+    # Events carry wall-clock + span ids; spans referenced exist
+    span_ids = {e["args"]["span_id"] for e in events if e["ph"] == "B"}
+    timeline = trainer.engine.timeline
+    stamped = [e for e in timeline if e.span is not None]
+    assert stamped, "no Event carries a span id"
+    assert all(e.span in span_ids for e in stamped)
+    assert all(e.t_wall is not None for e in stamped)
+
+    # engine metrics populated alongside
+    snap = obs_metrics.snapshot()
+    assert snap["engine.iter_wall_s"]["count"] == 3
+    assert snap["engine.plan_epoch"] == 1.0
+    assert snap["engine.swaps"] == 1
+    assert snap["gen.tokens"] > 0
+
+
+def test_e2e_calibration_within_10x():
+    trainer, _topo, _wf, _plan = _e2e_trainer()
+    rng = np.random.default_rng(1)
+    key = jax.random.PRNGKey(3)
+    for _ in range(3):
+        prompts, answers = trainer.task.sample_batch(rng, 2)
+        key, k = jax.random.split(key)
+        trainer.iteration(prompts, answers, k)
+    cal = obs_cal.fit_from_engine(trainer.engine, skip_iterations=1)
+    raw = trainer.engine.compare_with_simulator()
+    fixed = trainer.engine.compare_with_simulator(
+        cost_model=cal.cost_model(trainer.engine.topo, trainer.wf))
+    # calibration moves the ratio toward unity (uncalibrated it is off
+    # by whatever the local-host-vs-priced-GPU gap happens to be) and
+    # lands it in the usable 10x band
+    assert abs(math.log(fixed["ratio"])) < abs(math.log(raw["ratio"]))
+    assert 0.1 < fixed["ratio"] < 10.0
