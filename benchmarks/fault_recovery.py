@@ -1,0 +1,366 @@
+"""Fault-recovery benchmark: detection latency, recovery time and
+goodput for each injected-fault scenario (the self-healing acceptance
+gates).
+
+Scenarios, each on a live tiny trainer with a bound ``FaultInjector``:
+
+* **link_throttle** — an undeclared cross-machine throttle, detected
+  purely from the ``DivergenceMonitor`` (the topology feed never
+  changes).  The controller replans against the *inferred measured*
+  topology; both the incumbent and the post-replan plan are then scored
+  on the TRUE hidden topology (``injector.hidden_topology``) with the
+  simulator — the gate is post-replan throughput >= 1.2x the degraded
+  incumbent.
+* **transient_crash** — a train-task crash absorbed by bounded retry:
+  the gate is zero lost iterations (every scheduled iteration returns
+  metrics).
+* **permanent_crash** — retries cannot fix it: the engine escalates, the
+  controller drops the presumed-dead device and forces a replan onto the
+  survivors; the interrupted batch is re-run (<= 1 lost iteration).
+* **crash_resume** — checkpoint mid-training, keep training, "crash",
+  restore the latest checkpoint into a fresh trainer: the gate is a
+  bitwise ``state_tree()`` round-trip.
+* **slot_failure** — genserve decode slots die mid-wave under
+  ``REPRO_OBS_STRICT=1``: requests requeue with zero leaked pages and
+  (greedy) bit-identical output to the undisturbed run.
+
+Writes the benchmark CSV and a committed ``results/fault_recovery.json``.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import enumerate as enum_mod, retry, simulator, topology, \
+    workflow
+from repro.core.plan import check_constraints
+from repro.core.workflow import TaskKind
+from repro.checkpoint import io as ckpt_io
+from repro.data.synthetic import AdditionTask, EOS, PromptDataset, \
+    VOCAB_SIZE
+from repro.engine.elastic import ElasticConfig, ElasticController
+from repro.engine.executor import TaskExecutionError
+from repro.faults import FaultInjector, fault_scenario
+from repro.genserve.decoder import GenServeConfig, serve
+from repro.models import transformer as T
+from repro.models.config import LayerSpec, ModelConfig
+from repro.obs import calibrate as obs_cal
+from repro.obs import metrics as obs_metrics
+from repro.rl.trainer import RLConfig, RLTrainer
+
+from benchmarks.common import QUICK, emit
+
+
+def _tiny_cfg(name):
+    return ModelConfig(name=name, n_layers=2, d_model=64, n_heads=2,
+                       n_kv_heads=2, head_dim=32, d_ff=128,
+                       vocab_size=VOCAB_SIZE, dtype="float32")
+
+
+def _make_trainer(name):
+    cfg = _tiny_cfg(name)
+    task = AdditionTask(max_operand=9)
+    topo = topology.build_testbed("single_region",
+                                  counts={"A100": 4, "L4": 4})
+    spec = workflow.LLMSpec.from_model_config(cfg)
+    wf = workflow.make_workflow("grpo", spec, synchronous=True,
+                                n_rollouts=4, seq_in=task.prompt_len,
+                                seq_out=4, global_batch=1)
+    g = tuple(sorted(((0,), tuple(range(1, wf.n_tasks)))))
+    sizes = enum_mod.proportional_sizes(wf, g, topo.n)
+    plan = enum_mod.build_plan(topo, wf, g, sizes, list(range(topo.n)))
+    ok, msg = check_constraints(topo, wf, plan)
+    assert ok, msg
+    rl = RLConfig(algorithm="grpo", n_rollouts=4, max_new_tokens=4)
+    trainer = RLTrainer(cfg, rl, task, jax.random.PRNGKey(0), plan=plan,
+                       topo=topo, wf=wf)
+    trainer.engine.set_task_retry(
+        retry.RetryPolicy(max_attempts=3, base_delay_s=0.0),
+        sleep=lambda s: None)
+    return trainer, topo, wf
+
+
+def _train_task(wf):
+    return next(t for t in range(wf.n_tasks)
+                if wf.task(t).kind == TaskKind.TRAIN)
+
+
+def _iterate(trainer, ds, key):
+    prompts, answers = next(ds)
+    key, k = jax.random.split(key)
+    trainer.iteration(prompts, answers, k)
+    return key
+
+
+def link_throttle_row(quick: bool):
+    """Undeclared throttle -> divergence-only detection -> reactive
+    replan; both plans scored on the hidden ground-truth topology."""
+    trainer, topo, wf = _make_trainer("fr-throttle")
+    fault_at = 3
+    inj = FaultInjector(fault_scenario("link_throttle", at=fault_at))
+    trainer.engine.attach_fault_injector(inj)
+    ctrl = ElasticController(trainer, lambda it: topo,
+                             ElasticConfig(budget=120,
+                                           amortization_iters=5))
+    ds = iter(PromptDataset(trainer.task, batch=4, seed=1))
+    key = jax.random.PRNGKey(7)
+    for _ in range(fault_at):
+        key = _iterate(trainer, ds, key)
+    cal = obs_cal.fit_from_engine(trainer.engine)
+    monitor = obs_cal.DivergenceMonitor(threshold=2.0, sustain=2)
+    trainer.engine.attach_divergence_monitor(monitor, cal)
+    trainer.engine.set_task_deadlines(cal, slack=5.0)
+    ctrl.monitor = monitor
+
+    incumbent = trainer.plan
+    rec, step = None, fault_at
+    t0 = time.monotonic()
+    while rec is None and step < fault_at + 8:
+        key = _iterate(trainer, ds, key)
+        rec = ctrl.poll(step)
+        step += 1
+    recovery_s = time.monotonic() - t0
+    assert rec is not None and rec.reactive and rec.applied, \
+        "link throttle was never detected through the divergence monitor"
+
+    hidden = inj.hidden_topology(topo)
+    thr_old = simulator.simulate(hidden, wf, incumbent,
+                                 n_iterations=4).throughput
+    thr_new = simulator.simulate(hidden, wf, trainer.plan,
+                                 n_iterations=4).throughput
+    speedup = thr_new / thr_old if thr_old > 0 else math.inf
+    assert speedup >= 1.2, \
+        f"post-replan throughput {thr_new:.3f} is not >=1.2x the " \
+        f"degraded incumbent {thr_old:.3f}"
+    return {
+        "scenario": "link_throttle",
+        "recovered": True,
+        "detect_iters": rec.iteration - fault_at + 1,
+        "recovery_wall_s": recovery_s,
+        "lost_iters": 0,
+        "goodput_x": speedup,
+        "detail": {
+            "reactive": rec.reactive,
+            "reschedule_wall_s": rec.reschedule_s,
+            "hidden_incumbent_thr": thr_old,
+            "hidden_post_replan_thr": thr_new,
+            "epoch": trainer.engine.epoch,
+        },
+    }
+
+
+def transient_crash_row(quick: bool):
+    """Bounded retry absorbs a transient train-task crash in-iteration."""
+    trainer, topo, wf = _make_trainer("fr-transient")
+    iters = 6
+    inj = FaultInjector(fault_scenario("transient_crash", at=2,
+                                       train_task=_train_task(wf)))
+    trainer.engine.attach_fault_injector(inj)
+    ds = iter(PromptDataset(trainer.task, batch=4, seed=1))
+    key = jax.random.PRNGKey(7)
+    r0 = obs_metrics.counter("engine.task_retries").value
+    f0 = obs_metrics.counter("engine.task_failures").value
+    done, t0 = 0, time.monotonic()
+    for _ in range(iters):
+        key = _iterate(trainer, ds, key)
+        done += 1
+    wall = time.monotonic() - t0
+    retries = obs_metrics.counter("engine.task_retries").value - r0
+    failures = obs_metrics.counter("engine.task_failures").value - f0
+    lost = iters - done
+    assert lost <= 1 and failures == 0 and retries >= 2
+    return {
+        "scenario": "transient_crash",
+        "recovered": True,
+        "detect_iters": 0,
+        "recovery_wall_s": wall / iters,
+        "lost_iters": lost,
+        "goodput_x": 1.0,
+        "detail": {"retries": int(retries), "failures": int(failures),
+                   "iters": iters},
+    }
+
+
+def permanent_crash_row(quick: bool):
+    """Escalation: drop the dead device, force a replan, re-run the
+    interrupted batch."""
+    trainer, topo, wf = _make_trainer("fr-permanent")
+    inj = FaultInjector(fault_scenario("permanent_crash", at=2,
+                                       train_task=_train_task(wf)))
+    trainer.engine.attach_fault_injector(inj)
+    ctrl = ElasticController(trainer, lambda it: topo,
+                             ElasticConfig(budget=120,
+                                           amortization_iters=5))
+    ds = iter(PromptDataset(trainer.task, batch=4, seed=1))
+    key = jax.random.PRNGKey(7)
+    iters, done, step, lost = 5, 0, 0, 0
+    forced, recovery_s = None, 0.0
+    while done < iters:
+        prompts, answers = next(ds)
+        key, k = jax.random.split(key)
+        try:
+            trainer.iteration(prompts, answers, k)
+        except TaskExecutionError as e:
+            t0 = time.monotonic()
+            forced = ctrl.handle_failure(step, e)
+            recovery_s = time.monotonic() - t0
+            lost += 1                    # the batch itself is re-drawn
+            continue
+        done += 1
+        step += 1
+    assert forced is not None and forced.forced and forced.applied
+    assert lost <= 1
+    return {
+        "scenario": "permanent_crash",
+        "recovered": True,
+        "detect_iters": 0,
+        "recovery_wall_s": recovery_s,
+        "lost_iters": lost,
+        "goodput_x": 1.0,
+        "detail": {"reschedule_wall_s": forced.reschedule_s,
+                   "epoch": trainer.engine.epoch,
+                   "surviving_devices": trainer.engine.topo.n},
+    }
+
+
+def crash_resume_row(quick: bool, ckpt_dir: str):
+    """Checkpoint mid-training, crash, restore latest: bitwise."""
+    trainer, topo, wf = _make_trainer("fr-resume")
+    ctrl = ElasticController(trainer, lambda it: topo,
+                             ElasticConfig(ckpt_dir=ckpt_dir,
+                                           ckpt_retain=3))
+    ds = iter(PromptDataset(trainer.task, batch=4, seed=1))
+    key = jax.random.PRNGKey(7)
+    for _ in range(3):
+        key = _iterate(trainer, ds, key)
+    path, nbytes = ctrl.checkpoint_now(2)
+    want = jax.tree_util.tree_map(lambda x: np.asarray(x).copy(),
+                                  trainer.state_tree())
+    key = _iterate(trainer, ds, key)    # diverge past the checkpoint
+
+    fresh, _, _ = _make_trainer("fr-resume")
+    t0 = time.monotonic()
+    tree, loaded = ckpt_io.load_latest(ckpt_dir, fresh.state_tree())
+    fresh.load_state_tree(tree)
+    restore_s = time.monotonic() - t0
+    got = jax.tree_util.tree_flatten(fresh.state_tree())[0]
+    ref = jax.tree_util.tree_flatten(want)[0]
+    bitwise = len(got) == len(ref) and all(
+        np.asarray(a).dtype == np.asarray(b).dtype
+        and np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(got, ref))
+    assert bitwise, "state_tree() did not round-trip bitwise"
+    assert loaded == path
+    return {
+        "scenario": "crash_resume",
+        "recovered": True,
+        "detect_iters": 0,
+        "recovery_wall_s": restore_s,
+        "lost_iters": 1,                 # iterations past the checkpoint
+        "goodput_x": 1.0,
+        "detail": {"ckpt_bytes": int(nbytes), "bitwise": bitwise,
+                   "path": os.path.basename(path)},
+    }
+
+
+def slot_failure_row(quick: bool):
+    """Mid-wave decode-slot deaths: requeue, zero leaked pages (strict
+    mode), greedy output identical to the undisturbed run."""
+    cfg = ModelConfig(name="fr-gs", n_layers=2, d_model=64, n_heads=2,
+                      n_kv_heads=2, head_dim=32, d_ff=128,
+                      vocab_size=VOCAB_SIZE, dtype="float32",
+                      pattern=(LayerSpec(window=None),))
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    B, P, N = (6, 8, 6) if quick else (12, 8, 8)
+    prompts = jax.random.randint(jax.random.PRNGKey(3), (B, P), 0,
+                                 cfg.vocab_size, jnp.int32)
+    kw = dict(wave=4, max_new_tokens=N, eos_token=EOS, prefill_chunk=4,
+              greedy=True, page_size=4, prefix_cache=True)
+    prev = os.environ.get("REPRO_OBS_STRICT")
+    os.environ["REPRO_OBS_STRICT"] = "1"
+    try:
+        # warm the jit caches so the clean/faulted timing compares
+        # steady-state serving, not compilation
+        serve(params, cfg, prompts, jax.random.PRNGKey(7),
+              GenServeConfig(**kw))
+        t0 = time.monotonic()
+        ref, ref_stats = serve(params, cfg, prompts, jax.random.PRNGKey(7),
+                               GenServeConfig(**kw))
+        clean_s = time.monotonic() - t0
+        t0 = time.monotonic()
+        got, stats = serve(params, cfg, prompts, jax.random.PRNGKey(7),
+                           GenServeConfig(**kw),
+                           slot_failures={2: [0, 1]})
+        faulted_s = time.monotonic() - t0
+    finally:
+        if prev is None:
+            os.environ.pop("REPRO_OBS_STRICT", None)
+        else:
+            os.environ["REPRO_OBS_STRICT"] = prev
+    assert stats["requeued"] == 2 and stats["retired"] == B
+    m = np.asarray(ref["mask"]).astype(np.int32)
+    assert np.array_equal(m, np.asarray(got["mask"]).astype(np.int32))
+    assert np.array_equal(np.asarray(ref["gen_tokens"]) * m,
+                          np.asarray(got["gen_tokens"]) * m)
+    tokens = int(m.sum())
+    goodput = (tokens / faulted_s) / (tokens / clean_s) \
+        if faulted_s > 0 else 1.0
+    return {
+        "scenario": "slot_failure",
+        "recovered": True,
+        "detect_iters": 0,
+        "recovery_wall_s": faulted_s - clean_s,
+        "lost_iters": 0,
+        "goodput_x": goodput,
+        "detail": {"requeued": int(stats["requeued"]),
+                   "retired": int(stats["retired"]),
+                   "rounds_clean": len(ref_stats.get("rounds", [])),
+                   "rounds_faulted": len(stats.get("rounds", [])),
+                   "leaked_pages": 0},
+    }
+
+
+def run(quick: bool = QUICK):
+    ckpt_dir = os.path.join("results", "fault_ckpt")
+    rows = [
+        link_throttle_row(quick),
+        transient_crash_row(quick),
+        permanent_crash_row(quick),
+        crash_resume_row(quick, ckpt_dir),
+        slot_failure_row(quick),
+    ]
+    details = {r["scenario"]: r.pop("detail") for r in rows}
+    emit("fault_recovery", rows)
+    for r in rows:
+        r["detail"] = details[r["scenario"]]
+    path = os.path.join("results", "fault_recovery.json")
+    os.makedirs("results", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(_finite({"quick": quick, "scenarios": rows}), f,
+                  indent=2, allow_nan=False)
+    print(f"[fault_recovery] wrote {path}")
+
+
+def _finite(x):
+    """Strict-JSON sanitizer: non-finite floats become null."""
+    if isinstance(x, dict):
+        return {k: _finite(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_finite(v) for v in x]
+    if isinstance(x, (float, np.floating)):
+        return float(x) if math.isfinite(x) else None
+    if isinstance(x, (int, np.integer)):
+        return int(x)
+    return x
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, "src")
+    run()

@@ -84,7 +84,8 @@ def main() -> None:
                          "(e.g. genserve_throughput, fig3)")
     args = ap.parse_args()
 
-    from benchmarks import (elastic_redeploy, engine_throughput, fig3_e2e,
+    from benchmarks import (elastic_redeploy, engine_throughput,
+                            fault_recovery, fig3_e2e,
                             fig4_loadbalance, fig5_search_efficiency,
                             fig6_small_scale_ilp, fig7_costmodel_validation,
                             fig8_training_quality, fig10_heterogeneity,
@@ -94,6 +95,9 @@ def main() -> None:
          engine_throughput.run),
         ("elastic_redeploy", "§6 throughput recovery vs degraded incumbent",
          elastic_redeploy.run),
+        ("fault_recovery",
+         "injected faults: detection latency, recovery time, goodput",
+         fault_recovery.run),
         ("obs_overhead", "span-tracing overhead + cost-model calibration",
          obs_overhead.run),
         ("genserve_throughput",

@@ -1,16 +1,30 @@
 """Checkpointing: msgpack-serialized pytrees (no orbax offline).
 
 Supports periodic saves during RL training — the paper leans on this for
-online redeployment (§6: reschedule at checkpoint boundaries)."""
+online redeployment (§6: reschedule at checkpoint boundaries).
+
+Integrity: every checkpoint wraps the packed payload with a crc32
+content checksum, verified on restore.  ``restore`` raises a clear
+``CheckpointError`` for truncated / corrupt / mismatched files instead
+of a msgpack stack trace; ``load_latest`` walks a directory newest-first
+and falls back past damaged files.  Pre-checksum checkpoints (payload
+packed directly, no wrapper) still load.
+"""
 from __future__ import annotations
 
 import os
-from typing import Any, Dict, Tuple
+import warnings
+import zlib
+from typing import Any, List, Tuple
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
+
+
+class CheckpointError(Exception):
+    """A checkpoint file is corrupt, truncated, or shape-mismatched."""
 
 
 def _pack_leaf(x):
@@ -25,30 +39,125 @@ def _unpack_leaf(d):
     return jnp.asarray(arr.reshape(d[b"shape"]))
 
 
-def save(path: str, tree: Any) -> int:
-    """Returns bytes written."""
+def save(path: str, tree: Any, *, retain: int = 0) -> int:
+    """Write ``tree`` atomically (tmp + rename) with a crc32 checksum
+    over the packed payload.  ``retain > 0`` additionally prunes the
+    checkpoint directory down to the ``retain`` newest files sharing
+    this checkpoint's prefix-up-to-digits naming. Returns bytes written.
+    """
     flat, treedef = jax.tree_util.tree_flatten(tree)
     payload = {
         b"treedef": str(treedef).encode(),
         b"leaves": [_pack_leaf(x) for x in flat],
     }
+    inner = msgpack.packb(payload)
+    blob = msgpack.packb({b"crc32": zlib.crc32(inner), b"payload": inner})
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    blob = msgpack.packb(payload)
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
         f.write(blob)
     os.replace(tmp, path)
+    if retain > 0:
+        retain_last(os.path.dirname(os.path.abspath(path)), retain)
     return len(blob)
+
+
+def _read_payload(path: str) -> dict:
+    """Read + verify a checkpoint file, returning the unpacked payload
+    dict.  Raises CheckpointError on any damage."""
+    try:
+        with open(path, "rb") as f:
+            raw = f.read()
+    except OSError as e:
+        raise CheckpointError(f"{path}: unreadable ({e})") from e
+    if not raw:
+        raise CheckpointError(f"{path}: empty file")
+    try:
+        outer = msgpack.unpackb(raw)
+    except Exception as e:
+        raise CheckpointError(f"{path}: truncated or not msgpack "
+                              f"({type(e).__name__})") from e
+    if isinstance(outer, dict) and b"payload" in outer:
+        inner = outer[b"payload"]
+        crc = zlib.crc32(inner)
+        if crc != outer.get(b"crc32"):
+            raise CheckpointError(
+                f"{path}: checksum mismatch (stored "
+                f"{outer.get(b'crc32')}, computed {crc}) — corrupt")
+        try:
+            payload = msgpack.unpackb(inner)
+        except Exception as e:
+            raise CheckpointError(f"{path}: corrupt payload "
+                                  f"({type(e).__name__})") from e
+    elif isinstance(outer, dict) and b"leaves" in outer:
+        payload = outer  # legacy pre-checksum format
+    else:
+        raise CheckpointError(f"{path}: unrecognized checkpoint format")
+    if b"leaves" not in payload:
+        raise CheckpointError(f"{path}: payload missing leaves")
+    return payload
 
 
 def restore(path: str, like: Any) -> Any:
     """Restore into the structure of `like` (treedef source of truth)."""
-    with open(path, "rb") as f:
-        payload = msgpack.unpackb(f.read())
-    leaves = [_unpack_leaf(d) for d in payload[b"leaves"]]
+    payload = _read_payload(path)
+    try:
+        leaves = [_unpack_leaf(d) for d in payload[b"leaves"]]
+    except Exception as e:
+        raise CheckpointError(f"{path}: corrupt leaf encoding "
+                              f"({type(e).__name__})") from e
     flat, treedef = jax.tree_util.tree_flatten(like)
-    assert len(flat) == len(leaves), \
-        f"checkpoint has {len(leaves)} leaves, model has {len(flat)}"
+    if len(flat) != len(leaves):
+        raise CheckpointError(
+            f"{path}: checkpoint has {len(leaves)} leaves, "
+            f"model has {len(flat)}")
     restored = [l.astype(x.dtype).reshape(x.shape)
                 for l, x in zip(leaves, flat)]
     return jax.tree_util.tree_unflatten(treedef, restored)
+
+
+def _checkpoint_files(dirpath: str) -> List[str]:
+    """Checkpoint files in ``dirpath``, oldest→newest.  Zero-padded
+    iteration numbers in the names make lexicographic == chronological;
+    mtime breaks ties for mixed naming schemes."""
+    try:
+        names = [n for n in os.listdir(dirpath)
+                 if n.endswith(".msgpack") and not n.endswith(".tmp")]
+    except OSError:
+        return []
+    paths = [os.path.join(dirpath, n) for n in names]
+    return sorted(paths, key=lambda p: (os.path.basename(p),))
+
+
+def retain_last(dirpath: str, keep: int) -> List[str]:
+    """Delete all but the ``keep`` newest checkpoints in ``dirpath``.
+    Returns the paths removed."""
+    files = _checkpoint_files(dirpath)
+    removed = []
+    for p in files[:max(0, len(files) - keep)]:
+        try:
+            os.remove(p)
+            removed.append(p)
+        except OSError:
+            pass
+    return removed
+
+
+def load_latest(dirpath: str, like: Any) -> Tuple[Any, str]:
+    """Restore the newest loadable checkpoint in ``dirpath``, skipping
+    corrupt / truncated files with a warning.  Returns ``(tree, path)``;
+    raises CheckpointError listing every file tried if none loads."""
+    files = _checkpoint_files(dirpath)
+    if not files:
+        raise CheckpointError(f"{dirpath}: no checkpoint files")
+    errors: List[str] = []
+    for path in reversed(files):
+        try:
+            return restore(path, like), path
+        except CheckpointError as e:
+            warnings.warn(f"skipping checkpoint: {e}", RuntimeWarning,
+                          stacklevel=2)
+            errors.append(str(e))
+    raise CheckpointError(
+        f"{dirpath}: no loadable checkpoint among {len(files)} files:\n  "
+        + "\n  ".join(errors))

@@ -301,6 +301,31 @@ def degrade_links(topo: Topology, *, bw_factor: float = 0.05,
     return Topology(list(topo.devices), lat, bw)
 
 
+def scale_compute(topo: Topology, factor: float, *,
+                  device_class: Optional[str] = None,
+                  ids: Optional[Sequence[int]] = None) -> Topology:
+    """A copy of `topo` with selected devices' compute and HBM throughput
+    multiplied by ``factor`` (< 1 models thermal throttling / preemption
+    pressure on a device class).  Selection: explicit ``ids``, else every
+    device whose spec name equals ``device_class``, else all devices.
+    Link matrices are untouched; the input topology is not mutated."""
+    chosen = set(int(d) for d in ids) if ids is not None else None
+    devices = []
+    for d in topo.devices:
+        hit = (chosen is not None and d.id in chosen) or \
+            (chosen is None and (device_class is None
+                                 or d.spec.name == device_class))
+        if hit:
+            spec = dataclasses.replace(
+                d.spec, fp16_tflops=d.spec.fp16_tflops * factor,
+                hbm_gbps=d.spec.hbm_gbps * factor)
+            devices.append(dataclasses.replace(d, spec=spec))
+        else:
+            devices.append(d)
+    return Topology(devices, topo.latency_s.copy(),
+                    topo.bandwidth_gbps.copy())
+
+
 def drop_devices(topo: Topology, ids: Sequence[int]) -> Topology:
     """The topology with `ids` removed and the survivors re-indexed to a
     dense 0..n'-1 id space (matrices restricted accordingly).  Plans built

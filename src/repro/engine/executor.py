@@ -32,6 +32,7 @@ from typing import Any, Dict, List, Optional, Sequence
 import jax
 import numpy as np
 
+from repro.core import retry as retry_mod
 from repro.core.costmodel import CostModel
 from repro.core.plan import Plan, predicted_occupancy
 from repro.core.simulator import Event, SimResult, simulate
@@ -46,6 +47,28 @@ from repro.obs import trace as obs_trace
 # pseudo task id for the weight-migration event a plan swap replays onto
 # the timeline (real workflow tasks are 0..n_tasks-1)
 MIGRATION_TASK = -1
+
+
+class TaskExecutionError(Exception):
+    """A task executor failed beyond the engine's retry budget (or
+    permanently).  Carries enough context for the elastic controller to
+    escalate: the task, its assigned plan devices, and — for permanent
+    faults — the device ids presumed dead."""
+
+    def __init__(self, task: int, name: str, devices, attempts: int,
+                 cause: BaseException, *, permanent: bool = False,
+                 dead_devices=()):
+        super().__init__(
+            f"task {task} ({name}) failed "
+            f"{'permanently' if permanent else f'after {attempts} attempts'}"
+            f": {cause!r}")
+        self.task = task
+        self.task_name = name
+        self.devices = tuple(int(d) for d in devices)
+        self.attempts = attempts
+        self.cause = cause
+        self.permanent = permanent
+        self.dead_devices = tuple(int(d) for d in dead_devices)
 
 
 @dataclasses.dataclass
@@ -112,6 +135,17 @@ class Engine:
         self.divergence_monitor = None
         self._div_cost_model = None
         self._pred_cache: Optional[tuple] = None
+        # fault hardening: optional injector (repro.faults), bounded
+        # retry for transient task failures, calibrated per-task
+        # deadlines (predicted × slack; post-hoc — jitted computations
+        # cannot be preempted, so a miss is a signal, not an abort)
+        self.fault_injector = None
+        self.task_retry = retry_mod.RetryPolicy(max_attempts=3,
+                                                base_delay_s=0.02)
+        self._retry_sleep = time.sleep
+        self._deadline_slack: Optional[float] = None
+        self._deadline_cm = None
+        self._deadline_cache: Optional[tuple] = None
 
     # -- plan context ---------------------------------------------------
     def _make_context(self, plan: Plan, topo: Optional[Topology],
@@ -258,20 +292,57 @@ class Engine:
     def _run_stage(self, stage: Sequence[int], bb: Dict[str, Any],
                    durations: Dict[int, float],
                    meta: Dict[int, tuple]) -> None:
+        inj = self.fault_injector
+
+        def attempt_task(t, task, fn, attempt):
+            if inj is not None:
+                inj.before_task(t, attempt)
+            out = fn(self.state, bb, self.placements[t])
+            if out is not None:
+                jax.block_until_ready(out)
+
         def run_lane(lane: List[int]) -> None:
             for t in lane:
                 task = self.wf.task(t)
                 fn = tasks_mod.executor_for(task)
+                devs = [int(d) for d in self.plan.assignment[t].reshape(-1)]
                 with obs_trace.span(f"task.{task.name}", task=t,
                                     iteration=self._iter,
                                     epoch=self.ctx.epoch) as sp:
                     t0 = time.monotonic()
-                    out = fn(self.state, bb, self.placements[t])
-                    if out is not None:
-                        jax.block_until_ready(out)
+                    try:
+                        retry_mod.retry_call(
+                            lambda a, t=t, task=task, fn=fn:
+                                attempt_task(t, task, fn, a),
+                            policy=self.task_retry,
+                            on_retry=lambda a, e, t=t, sp=sp:
+                                self._on_task_retry(t, a, e, sp),
+                            sleep=self._retry_sleep)
+                    except retry_mod.RetryExhausted as e:
+                        obs_metrics.counter("engine.task_failures").inc()
+                        sp.set("failed", True)
+                        raise TaskExecutionError(
+                            t, task.name, devs, e.attempts, e.last) from e
+                    except retry_mod.PermanentError as e:
+                        obs_metrics.counter("engine.task_failures").inc()
+                        sp.set("failed", True)
+                        raise TaskExecutionError(
+                            t, task.name, devs, 1, e, permanent=True,
+                            dead_devices=getattr(e, "devices", ())) from e
                     t1 = time.monotonic()
-                durations[t] = t1 - t0
+                dur = t1 - t0
+                if inj is not None:
+                    # undeclared degradations stretch the replay clock,
+                    # never the host clock — this is what the divergence
+                    # monitor "measures"
+                    dur *= inj.dilation(t)
+                durations[t] = dur
                 meta[t] = (t0 - self._t0, sp.id)
+                deadline = self._task_deadline(t)
+                if deadline is not None and dur > deadline:
+                    obs_metrics.counter("engine.deadline_misses").inc()
+                    sp.set("deadline_s", deadline)
+                    sp.set("deadline_exceeded", True)
 
         lanes = self._lanes(stage)
         if len(lanes) == 1:
@@ -329,9 +400,62 @@ class Engine:
         self._iter += 1
         return events
 
+    # -- fault hardening -------------------------------------------------
+    def attach_fault_injector(self, injector) -> None:
+        """Bind a ``repro.faults.FaultInjector`` to this engine: it is
+        clocked at the top of every ``run_iteration``, consulted before
+        each task attempt (raising injected faults), and its dilation
+        stretches measured durations on the replay timeline."""
+        self.fault_injector = injector.bind(self)
+
+    def set_task_retry(self, policy, *, sleep=None) -> None:
+        """Override the transient-failure retry policy (and, for tests,
+        the backoff sleep)."""
+        self.task_retry = policy
+        if sleep is not None:
+            self._retry_sleep = sleep
+
+    def set_task_deadlines(self, cost_model=None, *,
+                           slack: float = 3.0) -> None:
+        """Arm per-task deadlines at predicted × ``slack``.  Only
+        meaningful with a calibrated model (``obs.calibrate.Calibration``
+        or a ``CostModel`` built from one) — the uncalibrated analytical
+        model is orders of magnitude off wall clock.  Misses are counted
+        (``engine.deadline_misses``) and stamped on the task span; the
+        task is never aborted (jitted computations cannot be preempted)."""
+        self._deadline_slack = slack
+        self._deadline_cm = cost_model
+        self._deadline_cache = None
+
+    def _task_deadline(self, t: int) -> Optional[float]:
+        if self._deadline_slack is None or self.topo is None \
+                or self.topology_stale:
+            return None
+        if self._deadline_cache is None \
+                or self._deadline_cache[0] != self.ctx.epoch:
+            src = self._deadline_cm
+            if src is None:
+                return None
+            cm = src.cost_model(self.topo, self.wf) \
+                if hasattr(src, "cost_model") else src
+            self._deadline_cache = (
+                self.ctx.epoch,
+                {tt: cm.task_cost(self.plan, tt).total
+                 * self._deadline_slack
+                 for tt in range(self.wf.n_tasks)})
+        return self._deadline_cache[1].get(t)
+
+    def _on_task_retry(self, t: int, attempt: int,
+                       exc: BaseException, sp) -> None:
+        obs_metrics.counter("engine.task_retries").inc()
+        sp.set("retries", attempt + 1)
+        sp.set("retry_error", type(exc).__name__)
+
     # -- one iteration --------------------------------------------------
     def run_iteration(self, prompts, answers, rng) -> EngineResult:
         t_iter0 = time.monotonic()
+        if self.fault_injector is not None:
+            self.fault_injector.begin_iteration(self._iter)
         with obs_trace.span("engine.iteration", iteration=self._iter,
                             epoch=self.ctx.epoch):
             result = self._run_iteration(prompts, answers, rng)
@@ -347,6 +471,8 @@ class Engine:
 
     def _run_iteration(self, prompts, answers, rng) -> EngineResult:
         bb: Dict[str, Any] = {"lock": threading.Lock(), "metrics": {}}
+        if self.fault_injector is not None:
+            bb["fault"] = self.fault_injector
         bb.update(self.state.prepare_inputs(prompts, answers, rng))
         self._samples = int(bb["prompts_rep"].shape[0])
         durations: Dict[int, float] = {}

@@ -61,14 +61,20 @@ def run_generation(st, bb, placement):
     B = int(prompts.shape[0])
     wave = plan_mod.decode_wave(B)
     mode = getattr(st.rl, "gen_engine", "auto")
-    use_engine = mode == "genserve" or (mode == "auto" and B > wave)
+    # scheduled decode-slot failures (repro.faults) only exist on the
+    # engine path — their presence forces it
+    injector = bb.get("fault")
+    slot_failures = injector.gen_slot_failures() \
+        if injector is not None else None
+    use_engine = mode == "genserve" or (mode == "auto" and B > wave) \
+        or slot_failures is not None
     with placement.mesh:
         if use_engine:
             ro, stats = genserve.generate(
                 st.gen_params, st.cfg, prompts, bb["rng"], st.sampler,
                 wave=wave, decode_chunk=getattr(st.rl, "decode_chunk", 1),
                 prefill_chunk=getattr(st.rl, "prefill_chunk", 0),
-                fast_path=False)
+                fast_path=False, slot_failures=slot_failures)
         else:
             ro = st._generate(st.gen_params, prompts=prompts,
                               rng=bb["rng"])

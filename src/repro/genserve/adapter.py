@@ -69,7 +69,9 @@ def generate(params, cfg: ModelConfig, prompts, rng,
              prompt_lens: Optional[Sequence[int]] = None,
              measure_ttft: bool = False, page_size: int = 0,
              prefix_cache: bool = False, pool_pages: int = 0,
-             sjf_aging: int = 0
+             sjf_aging: int = 0,
+             slot_failures: Optional[Dict[int, Sequence[int]]] = None,
+             cancels: Optional[Dict[int, Sequence[int]]] = None
              ) -> Tuple[Dict[str, jnp.ndarray], Dict[str, object]]:
     """Continuous-batching generation with the rollout contract.
 
@@ -86,11 +88,15 @@ def generate(params, cfg: ModelConfig, prompts, rng,
     ``prefix_cache=True`` adds radix prefix reuse across slots (prefill
     skipped on cached prompt prefixes) — both imply the engine path
     since paged admission is chunked by construction.
+    ``slot_failures`` / ``cancels`` (round -> slot ids / request ids)
+    inject mid-wave slot deaths and explicit request cancels; either
+    forces the engine path (the single-wave scan has no slots to fail).
     """
     B = int(np.asarray(prompts).shape[0])
     W = int(wave) if wave else plan_mod.decode_wave(B)
     if fast_path and gen_lens is None and prefill_chunk == 0 \
-            and page_size == 0 and B <= W:
+            and page_size == 0 and B <= W \
+            and not slot_failures and not cancels:
         ro = rollout.generate(params, cfg, jnp.asarray(prompts), rng,
                               sampler)
         return ro, wave_stats_from_mask(ro["mask"], wave=min(W, B))
@@ -104,4 +110,5 @@ def generate(params, cfg: ModelConfig, prompts, rng,
                           prefix_cache=prefix_cache, pool_pages=pool_pages,
                           sjf_aging=sjf_aging)
     return serve(params, cfg, prompts, rng, gcfg, gen_lens=gen_lens,
-                 prompt_lens=prompt_lens)
+                 prompt_lens=prompt_lens, slot_failures=slot_failures,
+                 cancels=cancels)

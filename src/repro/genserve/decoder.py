@@ -517,7 +517,9 @@ def _init_state(cfg: ModelConfig, gcfg: GenServeConfig, prompt_len: int,
 
 def serve(params, cfg: ModelConfig, prompts, rng, gcfg: GenServeConfig,
           gen_lens: Optional[Sequence[int]] = None,
-          prompt_lens: Optional[Sequence[int]] = None
+          prompt_lens: Optional[Sequence[int]] = None,
+          slot_failures: Optional[Dict[int, Sequence[int]]] = None,
+          cancels: Optional[Dict[int, Sequence[int]]] = None
           ) -> Tuple[Dict[str, jnp.ndarray], Dict[str, object]]:
     """Generate for all `prompts` [B, P] with continuous batching.
 
@@ -530,7 +532,20 @@ def serve(params, cfg: ModelConfig, prompts, rng, gcfg: GenServeConfig,
     admission path (``gcfg.prefill_chunk > 0``) ingests only the real
     tokens and lands each slot at its own length; the one-shot path
     prefills the padded width (padding-as-content — the reference
-    semantics), so cross-path parity holds only for uniform lengths."""
+    semantics), so cross-path parity holds only for uniform lengths.
+
+    Fault/cancel hooks (both keyed on the 1-based host round index,
+    applied at the top of that round):
+
+    * ``slot_failures``: round -> decode-slot ids that die there.  The
+      in-flight request is requeued from scratch — slot freed, device
+      occupancy/prefill flags cleared, partial output rows zeroed,
+      pages decrefed (shared prefix pages survive in the radix tree, so
+      re-admission skips the cached prefill) — and the loop runs until
+      it completes like any other request.
+    * ``cancels``: round -> request ids to retire explicitly (no EOS,
+      no budget exhaustion): dequeued if pending, evicted + zeroed if
+      in-flight; their output rows are all-zero with an all-zero mask."""
     gcfg.validate()
     prompts_np = np.asarray(prompts, np.int32)
     B, P = prompts_np.shape
@@ -593,15 +608,66 @@ def serve(params, cfg: ModelConfig, prompts, rng, gcfg: GenServeConfig,
     # landings are known without a device sync
     prefill_left = np.zeros((W,), np.int64)
     t_start = time.monotonic()
+
+    def evict_slot(s: int) -> None:
+        """Clear slot ``s``'s device + host residue after a failure or
+        cancel: occupancy/prefill flags down, pages decrefed.  The
+        caller has already fixed the table's books."""
+        nonlocal state, occupied
+        state["occupied"] = state["occupied"].at[s].set(False)
+        if chunked:
+            state["prefilling"] = state["prefilling"].at[s].set(False)
+            prefill_left[s] = 0
+        occupied = occupied.copy()  # np.asarray views of jax arrays are
+        occupied[s] = False         # read-only
+
+        if sharing and slot_pages[s]:
+            pool.decref(slot_pages[s])
+            slot_pages[s] = []
+            slot_tokens.pop(s, None)
+
+    def zero_request_rows(rid: int) -> None:
+        """Wipe a request's partial output (tokens, logprobs, mask) so a
+        requeued regeneration — possibly shorter — leaves no stale
+        columns, and a cancelled request reads as all-masked."""
+        nonlocal state
+        for k in ("gen", "lp", "mask"):
+            state[k] = state[k].at[rid].set(0)
+
     while len(queue) or table.active:
         round_idx += 1
-        assert round_idx <= 2 * B * (N + 1) + B * (nchunks + 1), \
+        # requeued requests legitimately extend the round budget: each
+        # re-admission costs at most one extra full request lifetime
+        budget_reqs = B + table.requeued
+        assert round_idx <= 2 * budget_reqs * (N + 1) \
+            + budget_reqs * (nchunks + 1), \
             "genserve loop did not converge"
         t0 = time.monotonic()
         # span opened/closed manually: the loop body stays un-indented
         # (an aborted round is simply not recorded)
         rspan = obs_trace.span("gen.round", round=round_idx)
         rspan.__enter__()
+        if slot_failures and round_idx in slot_failures:
+            for s in slot_failures[round_idx]:
+                rid = table.fail_slot(int(s))
+                if rid == FREE:
+                    continue
+                evict_slot(int(s))
+                zero_request_rows(rid)
+                queue.push(Request(rid, int(limits[rid])))
+        if cancels and round_idx in cancels:
+            for rid in cancels[round_idx]:
+                rid = int(rid)
+                if queue.cancel(rid):
+                    # never admitted: only the cancel is counted
+                    table.cancelled += 1
+                    obs_metrics.counter("gen.cancelled").inc()
+                    continue
+                if rid in table.slot_req:
+                    s = table.slot_req.index(rid)
+                    table.cancel_slot(s)
+                    evict_slot(s)
+                    zero_request_rows(rid)
         obs_metrics.gauge("gen.queue_depth").set(len(queue))
         admitted = 0
         may_live = False
@@ -834,6 +900,7 @@ def serve(params, cfg: ModelConfig, prompts, rng, gcfg: GenServeConfig,
              "ttft": ttft, "queue_wait": queue_wait,
              "rounds": rounds, "prefills": n_prefills,
              "admitted": table.admitted, "retired": table.retired,
+             "requeued": table.requeued, "cancelled": table.cancelled,
              "page_size": ps, "prefix_cache": sharing,
              "prefix_hit_rate": table.prefix_hit_rate(),
              "prefill_tokens_skipped": table.prefix_hit_tokens,

@@ -112,6 +112,21 @@ class RequestQueue:
             take, self._pending = self._pending[:n], self._pending[n:]
         return [e[2] for e in take]
 
+    def push(self, request: Request) -> None:
+        """Re-admit a request (slot-failure requeue).  It rejoins with a
+        fresh arrival number — after everything currently pending under
+        fifo, in budget order under sjf (stable re-sort)."""
+        order = (self._pending[-1][0] + 1) if self._pending else 0
+        self._pending.append([order, 0, request])
+        if self.policy == "sjf":
+            self._pending.sort(key=lambda e: (e[2].max_new_tokens, e[0]))
+
+    def cancel(self, rid: int) -> bool:
+        """Drop a pending request by id; True if it was queued."""
+        before = len(self._pending)
+        self._pending = [e for e in self._pending if e[2].rid != rid]
+        return len(self._pending) != before
+
 
 class SlotTable:
     """Tracks occupancy of the ``wave`` decode slots + engine statistics."""
@@ -122,6 +137,8 @@ class SlotTable:
         self.slot_req: List[int] = [FREE] * wave
         self.admitted = 0
         self.retired = 0
+        self.requeued = 0                      # slot-failure re-admissions
+        self.cancelled = 0                     # explicit cancels
         self.occupancy_trace: List[int] = []   # active slots per decode step
         self.prefill_trace: List[int] = []     # prefilling slots per mixed
         #                                        round (chunked admission)
@@ -143,6 +160,28 @@ class SlotTable:
             assert self.slot_req[s] == FREE, f"slot {s} already occupied"
             self.slot_req[s] = req.rid
             self.admitted += 1
+
+    def fail_slot(self, s: int) -> int:
+        """A decode slot died mid-flight: free it and return the request
+        id that was in it (FREE if it was empty).  The caller owns page
+        decref + requeue; this only fixes the table's books."""
+        rid = self.slot_req[s]
+        if rid != FREE:
+            self.slot_req[s] = FREE
+            self.requeued += 1
+            obs_metrics.counter("gen.slot_failures").inc()
+        return rid
+
+    def cancel_slot(self, s: int) -> int:
+        """Explicitly retire a slot's request without EOS/budget: free
+        the slot, count the cancel, return the evicted request id."""
+        rid = self.slot_req[s]
+        if rid != FREE:
+            self.slot_req[s] = FREE
+            self.retired += 1
+            self.cancelled += 1
+            obs_metrics.counter("gen.cancelled").inc()
+        return rid
 
     def retire_finished(self, occupied: np.ndarray) -> List[int]:
         """Reconcile with the device's occupied vector after a decode

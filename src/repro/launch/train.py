@@ -21,6 +21,19 @@ time per plan epoch:
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --smoke \
         --rl grpo --steps 12 --batch 8 --drift drop_tail --drift-at 4
+
+``--fault <scenario>`` injects a named *fault* (see
+``repro.faults.FAULT_SCENARIOS``) on the engine's iteration clock:
+undeclared degradations are detected purely from measured-vs-predicted
+divergence (a short calibration warmup arms the monitor), transient
+crashes are absorbed by bounded retry, permanent failures escalate to a
+forced replan on the survivors.  Composes with ``--drift`` (declared +
+undeclared drift in one run); ``--require-recover`` exits non-zero
+unless the scenario's recovery mechanism actually engaged:
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --smoke \
+        --rl grpo --steps 12 --batch 8 --fault link_throttle \
+        --fault-at 6 --require-recover
 """
 from __future__ import annotations
 
@@ -55,6 +68,60 @@ def make_batch(cfg, key, batch, seq):
     out["labels"] = labels
     out["loss_mask"] = jnp.ones((batch, seq), jnp.dtype(cfg.dtype))
     return out
+
+
+def _assert_recovered(scenario: str, trainer, controller, injector) -> None:
+    """--require-recover: fail loudly unless the scenario's recovery
+    mechanism actually engaged (CI smoke gate)."""
+    from repro.obs import metrics as obs_metrics
+    snap = obs_metrics.snapshot()
+    records = controller.records if controller is not None else []
+    if scenario in ("link_throttle", "device_slowdown", "straggler"):
+        assert any(r.reactive for r in records), (
+            f"{scenario}: divergence monitor never fired a reactive "
+            f"replan (records={len(records)})")
+        print(f"recovered: reactive replan at iteration "
+              f"{next(r.iteration for r in records if r.reactive)}")
+    elif scenario == "transient_crash":
+        assert snap.get("engine.task_retries", 0) > 0, \
+            "transient_crash: no retries recorded"
+        assert not snap.get("engine.task_failures"), \
+            "transient_crash: failure escaped the retry budget"
+        print(f"recovered: {int(snap['engine.task_retries'])} retries "
+              f"absorbed the crash")
+    elif scenario in ("permanent_crash", "device_drop"):
+        assert any(r.forced for r in records), \
+            f"{scenario}: no forced replan happened"
+        rec = next(r for r in records if r.forced)
+        print(f"recovered: forced replan at iteration {rec.iteration} "
+              f"-> epoch {rec.epoch}")
+    elif scenario in ("ckpt_fail",):
+        assert snap.get("checkpoint.retries", 0) > 0, \
+            "ckpt_fail: no checkpoint retries recorded"
+        print(f"recovered: {int(snap['checkpoint.retries'])} checkpoint "
+              f"retries")
+    elif scenario == "ckpt_flaky":
+        assert snap.get("checkpoint.failures", 0) > 0, \
+            "ckpt_flaky: warn-and-continue never engaged"
+        print("recovered: checkpoint degraded to warn-and-continue, "
+              "training completed")
+    elif scenario == "ckpt_corrupt":
+        from repro.checkpoint import io as ckpt_io
+        assert injector.fired("ckpt_corrupt"), \
+            "ckpt_corrupt: corruption never fired"
+        tree, path = ckpt_io.load_latest("results/elastic_ckpt",
+                                         trainer.state_tree())
+        print(f"recovered: load_latest fell back to {path}")
+    elif scenario == "slot_failure":
+        assert snap.get("gen.slot_failures", 0) > 0, \
+            "slot_failure: no slots failed"
+        print(f"recovered: {int(snap['gen.slot_failures'])} slot "
+              f"failures requeued")
+    else:  # chaos
+        assert injector is not None and injector.log, \
+            f"{scenario}: no fault events fired"
+        print(f"recovered: completed under {len(injector.log)} "
+              f"injected events")
 
 
 def run_rl(args) -> None:
@@ -96,16 +163,47 @@ def run_rl(args) -> None:
     trainer = RLTrainer(cfg, rl, task, jax.random.PRNGKey(0), plan=r.plan,
                         topo=topo, wf=wf)
 
+    # fault injection (undeclared degradations + crash scenarios)
+    injector = None
+    warmup = 0
+    if args.fault:
+        from repro.core import retry
+        from repro.core.workflow import TaskKind
+        from repro.faults import FaultInjector, fault_scenario
+        warmup = min(3, max(args.steps - 2, 1))
+        fault_at = args.fault_at if args.fault_at is not None \
+            else max(args.steps // 2, warmup + 1)
+        gen_task = next(t for t in range(wf.n_tasks)
+                        if wf.task(t).kind == TaskKind.GEN)
+        train_task = next(t for t in range(wf.n_tasks)
+                          if wf.task(t).kind == TaskKind.TRAIN
+                          and wf.task(t).name.startswith("actor"))
+        fplan = fault_scenario(args.fault, at=fault_at, topo=topo,
+                               gen_task=gen_task, train_task=train_task,
+                               n_tasks=wf.n_tasks)
+        print(f"faults: {fplan.describe()}")
+        injector = FaultInjector(fplan)
+        trainer.engine.attach_fault_injector(injector)
+        trainer.engine.set_task_retry(
+            retry.RetryPolicy(max_attempts=3, base_delay_s=0.05))
+
     controller = None
-    if args.drift:
+    if args.drift or args.fault:
         from repro.engine.elastic import ElasticConfig, ElasticController
-        drift_at = args.drift_at if args.drift_at is not None \
-            else max(args.steps // 2, 1)
-        schedule = topology.drift_scenario(args.drift, topo, at=drift_at)
+        if args.drift:
+            drift_at = args.drift_at if args.drift_at is not None \
+                else max(args.steps // 2, 1)
+            feed = topology.drift_scenario(args.drift, topo, at=drift_at)
+        else:
+            # constant feed: any reaction must come from the divergence
+            # monitor or failure escalation, never from a declared drift
+            feed = lambda it: topo  # noqa: E731
         controller = ElasticController(
-            trainer, schedule,
+            trainer, feed,
             ElasticConfig(budget=args.search_budget,
                           ckpt_dir="results/elastic_ckpt"))
+
+    from repro.engine.executor import TaskExecutionError
 
     ds = iter(PromptDataset(task, batch=args.batch, seed=1))
     key = jax.random.PRNGKey(42)
@@ -113,20 +211,51 @@ def run_rl(args) -> None:
         prompts, answers = next(ds)
         key, k = jax.random.split(key)
         t0 = time.time()
-        m = trainer.iteration(prompts, answers, k)
+        try:
+            m = trainer.iteration(prompts, answers, k)
+        except TaskExecutionError as e:
+            if controller is None:
+                raise
+            print(f"iter {step:4d} TASK FAILURE: {e}")
+            rec = controller.handle_failure(step, e)
+            print(f"  escalated: dropped dead devices, forced replan -> "
+                  f"epoch={rec.epoch} "
+                  f"new={rec.decision.new_cost * 1e3:.3f}ms/iter")
+            m = trainer.iteration(prompts, answers, k)
         print(f"iter {step:4d} reward={m['reward_mean']:.3f} "
               f"kl={m['kl']:.3f} sync={m['sync_gb'] * 1e3:.1f}MB "
               f"({time.time() - t0:.2f}s)")
+        if args.fault and step + 1 == warmup:
+            # calibration warmup done: arm the divergence monitor and
+            # calibrated deadlines — undeclared faults are detectable
+            # from here on
+            from repro.obs import calibrate as obs_cal
+            cal = obs_cal.fit_from_engine(trainer.engine)
+            monitor = obs_cal.DivergenceMonitor(threshold=2.0, sustain=2)
+            trainer.engine.attach_divergence_monitor(monitor, cal)
+            trainer.engine.set_task_deadlines(cal, slack=5.0)
+            controller.monitor = monitor
+            print(f"  calibrated ({cal.n_samples} samples); divergence "
+                  f"monitor + deadlines armed")
+        if args.fault and args.fault.startswith("ckpt"):
+            controller.checkpoint_now(step)
         if controller is not None:
             rec = controller.poll(step)
             if rec is not None:
                 d = rec.decision
-                print(f"  drift: reschedule in {rec.reschedule_s:.1f}s -> "
+                print(f"  drift{' (reactive)' if rec.reactive else ''}: "
+                      f"reschedule in {rec.reschedule_s:.1f}s -> "
                       f"switch={d.switch} old={d.old_cost * 1e3:.3f}ms "
                       f"new={d.new_cost * 1e3:.3f}ms "
                       f"trans={d.transition_cost_s * 1e3:.3f}ms "
                       f"epoch={rec.epoch} "
                       f"ckpt={rec.ckpt_bytes / 1e6:.1f}MB")
+    if injector is not None:
+        fired = [r for r in injector.log if r["what"] != "activate"]
+        print(f"faults fired: {len(injector.log)} events "
+              f"({len(fired)} raises/corruptions)")
+    if args.fault and args.require_recover:
+        _assert_recovered(args.fault, trainer, controller, injector)
     if controller is not None:
         for row in trainer.engine.epoch_report():
             print(f"epoch {row['epoch']}: {row['iterations']} iters, "
@@ -169,6 +298,16 @@ def main():
                          "core.topology.DRIFT_SCENARIOS")
     ap.add_argument("--drift-at", type=int, default=None,
                     help="iteration the drift fires at (default steps//2)")
+    ap.add_argument("--fault", default=None,
+                    help="inject a named fault scenario mid-run (with "
+                         "--rl); see repro.faults.FAULT_SCENARIOS; "
+                         "composes with --drift")
+    ap.add_argument("--fault-at", type=int, default=None,
+                    help="iteration the fault fires at (default steps//2, "
+                         "after the calibration warmup)")
+    ap.add_argument("--require-recover", action="store_true",
+                    help="exit non-zero unless the fault scenario's "
+                         "recovery mechanism engaged (CI gate)")
     ap.add_argument("--calibrate", action="store_true",
                     help="fit cost-model calibration from the measured "
                          "timeline and report the corrected measured-vs-"

@@ -296,3 +296,59 @@ class DivergenceMonitor:
         """Read-and-clear the fire latch."""
         fired, self._fired = self._fired, False
         return fired
+
+
+# ---------------------------------------------------------------------------
+# Measured-topology inference (reactive replan target)
+# ---------------------------------------------------------------------------
+
+def infer_drifted_topology(topo: Topology, wf: RLWorkflow, plan: Plan,
+                           monitor: DivergenceMonitor, *,
+                           min_ratio: float = 1.5) -> Optional[Topology]:
+    """Turn a fired ``DivergenceMonitor`` into the *measured* topology
+    the scheduler should replan against.
+
+    The believed topology is wrong somewhere — the monitor tells us
+    which tasks run slower than predicted, and the cost model tells us
+    how much of each task is communication vs compute.  Attribution per
+    drifted task with EWMA ratio ``r``:
+
+    * communication-bound drift (the task moves bytes across machines):
+      assume the slowdown lives on the links.  A bandwidth scale ``f``
+      satisfying ``comm / f = comm + (r - 1) * total`` (extra time goes
+      to the comm term) is applied to every cross-machine link between
+      the task's machines, latency scaled by ``1/f``.
+    * compute-bound drift (no cross-machine communication): the task's
+      device class lost throughput; its compute/HBM scales by ``1/r``.
+
+    This is deliberately coarse — it does not recover the exact hidden
+    degradation, only a topology under which the scheduler prices the
+    observed slowdown and routes around it.  Returns None when nothing
+    is drifted beyond ``min_ratio``."""
+    from repro.core import topology as topo_mod
+
+    cm = CostModel(topo, wf)
+    out = topo
+    changed = False
+    for t in monitor.drifted_tasks():
+        r = monitor.ratio(t)
+        if r < min_ratio:
+            continue
+        tc = cm.task_cost(plan, t)
+        comm = tc.tp + tc.pp + tc.dp
+        devs = [int(d) for d in plan.assignment[t].reshape(-1)]
+        cross_pairs = [(a, b) for i, a in enumerate(devs)
+                       for b in devs[i + 1:]
+                       if topo.devices[a].machine != topo.devices[b].machine]
+        if comm > 0 and cross_pairs and tc.total > 0:
+            extra = (r - 1.0) * tc.total
+            f = comm / (comm + extra)
+            out = topo_mod.degrade_links(out, bw_factor=f,
+                                         lat_factor=1.0 / f,
+                                         pairs=cross_pairs)
+            changed = True
+        else:
+            cls = device_class_of(topo, plan, t)
+            out = topo_mod.scale_compute(out, 1.0 / r, device_class=cls)
+            changed = True
+    return out if changed else None

@@ -22,16 +22,30 @@ without bound.
 
 ``REPRO_METRICS=<path>`` registers an atexit hook dumping a snapshot as
 JSON (the CI smokes upload it as a workflow artifact).
+
+Fault/recovery namespace (``repro.faults`` + the hardened engine path):
+
+    faults.<kind>            injected events fired, per fault kind
+    engine.task_retries      transient task failures absorbed by retry
+    engine.task_failures     failures beyond the retry budget
+    engine.deadline_misses   tasks beyond predicted × slack (calibrated)
+    checkpoint.retries       checkpoint writes that needed a retry
+    checkpoint.failures      checkpoint writes abandoned (warn-and-go-on)
+    elastic.forced_replans   failure escalations (drop + forced swap)
+    gen.slot_failures        decode slots declared dead (requeued)
+    gen.cancelled            requests explicitly cancelled
 """
 from __future__ import annotations
 
 import atexit
+import contextlib
 import json
 import os
 import threading
+import time
 from typing import Dict, List, Union
 
-__all__ = ["counter", "gauge", "histogram", "snapshot", "reset",
+__all__ = ["counter", "gauge", "histogram", "snapshot", "reset", "timer",
            "Counter", "Gauge", "Histogram", "Registry", "REGISTRY"]
 
 _HIST_CAP = 65536
@@ -164,6 +178,17 @@ def gauge(name: str) -> Gauge:
 
 def histogram(name: str) -> Histogram:
     return REGISTRY.histogram(name)
+
+
+@contextlib.contextmanager
+def timer(name: str):
+    """Time a block into ``histogram(name)`` (seconds): the recovery
+    benchmarks wrap detection/replan/restore windows with it."""
+    t0 = time.monotonic()
+    try:
+        yield
+    finally:
+        histogram(name).observe(time.monotonic() - t0)
 
 
 def snapshot() -> Dict[str, object]:

@@ -1,0 +1,472 @@
+"""Fault-injection + self-healing tests (repro.faults and the hardened
+execution path).
+
+- retry semantics: bounded backoff, permanent short-circuit, exhaustion;
+- checkpoint integrity: crc32 detects in-place corruption, legacy
+  (pre-checksum) files still load, ``load_latest`` falls back past
+  damaged files, ``retain`` prunes to the newest K;
+- fault determinism: the same seeded ``FaultPlan`` on two fresh engines
+  produces an identical injected-event log and Event-timeline shape;
+- transient crash: absorbed by the engine's bounded retry with zero
+  lost iterations;
+- permanent crash: escalates through ``ElasticController.handle_failure``
+  to drop-devices + forced replan, and the injected fault heals once the
+  plan epoch advances;
+- checkpoint fault chain: injected write failures retry / degrade to
+  warn-and-continue, an injected corruption is skipped by the
+  ``load_latest`` fallback, and a fresh trainer restores the surviving
+  checkpoint bitwise (``state_tree()`` round-trip);
+- reactive replan: an undeclared link throttle detected purely via the
+  ``DivergenceMonitor`` triggers a plan switch;
+- genserve: slot failures requeue in-flight requests with zero page
+  leaks under ``REPRO_OBS_STRICT=1`` (greedy decode makes the requeued
+  rollout bit-identical to the undisturbed run), and explicit cancels
+  retire requests as all-masked rows without disturbing the others.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import pytest
+
+from repro.checkpoint import io as ckpt_io
+from repro.core import enumerate as enum_mod, retry, topology, workflow
+from repro.core.plan import check_constraints
+from repro.core.workflow import TaskKind
+from repro.data.synthetic import AdditionTask, EOS, VOCAB_SIZE
+from repro.engine.elastic import ElasticConfig, ElasticController
+from repro.engine.executor import TaskExecutionError
+from repro.faults import (FAULT_SCENARIOS, FaultEvent, FaultInjector,
+                          FaultPlan, fault_scenario)
+from repro.genserve.decoder import GenServeConfig, serve
+from repro.models import transformer as T
+from repro.models.config import LayerSpec, ModelConfig
+from repro.obs import calibrate as obs_cal
+from repro.obs import metrics as obs_metrics
+from repro.rl.trainer import RLConfig, RLTrainer
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _nosleep(_s):
+    pass
+
+
+# ---------------------------------------------------------------------------
+# harness (mirrors test_elastic)
+# ---------------------------------------------------------------------------
+
+def tiny_cfg():
+    return ModelConfig(name="ft-tiny", n_layers=2, d_model=64, n_heads=2,
+                       n_kv_heads=2, head_dim=32, d_ff=128,
+                       vocab_size=VOCAB_SIZE, dtype="float32")
+
+
+def reference_pool():
+    return topology.build_testbed("single_region",
+                                  counts={"A100": 4, "L4": 4})
+
+
+def make_trainer():
+    cfg = tiny_cfg()
+    task = AdditionTask(max_operand=9)
+    topo = reference_pool()
+    spec = workflow.LLMSpec.from_model_config(cfg)
+    wf = workflow.make_workflow("grpo", spec, synchronous=True,
+                                n_rollouts=4, seq_in=task.prompt_len,
+                                seq_out=4, global_batch=1)
+    g = tuple(sorted(((0,), tuple(range(1, wf.n_tasks)))))
+    sizes = enum_mod.proportional_sizes(wf, g, topo.n)
+    plan = enum_mod.build_plan(topo, wf, g, sizes, list(range(topo.n)))
+    ok, msg = check_constraints(topo, wf, plan)
+    assert ok, msg
+    rl = RLConfig(algorithm="grpo", n_rollouts=4, max_new_tokens=4)
+    trainer = RLTrainer(cfg, rl, task, KEY, plan=plan, topo=topo, wf=wf)
+    return trainer, topo, wf
+
+
+def run_iters(trainer, n, batch=4, seed=0):
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(7)
+    out = []
+    for _ in range(n):
+        prompts, answers = trainer.task.sample_batch(rng, batch)
+        key, k = jax.random.split(key)
+        out.append(trainer.iteration(prompts, answers, k))
+    return out
+
+
+def train_task_id(wf):
+    return next(t for t in range(wf.n_tasks)
+                if wf.task(t).kind == TaskKind.TRAIN)
+
+
+def attach(trainer, fault_plan):
+    inj = FaultInjector(fault_plan)
+    trainer.engine.attach_fault_injector(inj)
+    trainer.engine.set_task_retry(
+        retry.RetryPolicy(max_attempts=3, base_delay_s=0.0),
+        sleep=_nosleep)
+    return inj
+
+
+# ---------------------------------------------------------------------------
+# core/retry
+# ---------------------------------------------------------------------------
+
+def test_retry_backoff_and_exhaustion():
+    pol = retry.RetryPolicy(max_attempts=3, base_delay_s=0.1, factor=2.0,
+                            max_delay_s=0.15)
+    assert pol.delay(0) == pytest.approx(0.1)
+    assert pol.delay(1) == pytest.approx(0.15)   # capped
+
+    calls, slept = [], []
+
+    def flaky(attempt):
+        calls.append(attempt)
+        if attempt < 2:
+            raise retry.TransientError("boom")
+        return "ok"
+
+    assert retry.retry_call(flaky, policy=pol, sleep=slept.append) == "ok"
+    assert calls == [0, 1, 2]
+    assert slept == [pytest.approx(0.1), pytest.approx(0.15)]
+
+    with pytest.raises(retry.RetryExhausted) as ei:
+        retry.retry_call(lambda a: (_ for _ in ()).throw(
+            retry.TransientError("x")), policy=pol, sleep=_nosleep)
+    assert ei.value.attempts == 3
+    assert isinstance(ei.value.last, retry.TransientError)
+
+    perm_calls = []
+
+    def perm(attempt):
+        perm_calls.append(attempt)
+        raise retry.PermanentError("dead")
+
+    with pytest.raises(retry.PermanentError):
+        retry.retry_call(perm, policy=pol, sleep=_nosleep)
+    assert perm_calls == [0]          # never retried
+
+
+# ---------------------------------------------------------------------------
+# checkpoint integrity
+# ---------------------------------------------------------------------------
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"w": jax.random.normal(k, (4, 3)),
+            "b": jnp.arange(5, dtype=jnp.int32) + seed}
+
+
+def _assert_trees_bitwise(a, b):
+    fa = jax.tree_util.tree_flatten(a)[0]
+    fb = jax.tree_util.tree_flatten(b)[0]
+    assert len(fa) == len(fb)
+    for x, y in zip(fa, fb):
+        xa, ya = np.asarray(x), np.asarray(y)
+        assert xa.dtype == ya.dtype
+        np.testing.assert_array_equal(xa, ya)
+
+
+def test_checkpoint_crc_detects_corruption(tmp_path):
+    p = str(tmp_path / "ck_00001.msgpack")
+    tree = _tree()
+    ckpt_io.save(p, tree)
+    _assert_trees_bitwise(ckpt_io.restore(p, _tree(1)), tree)
+    raw = bytearray(open(p, "rb").read())
+    mid = len(raw) // 2
+    raw[mid:mid + 8] = bytes(b ^ 0xFF for b in raw[mid:mid + 8])
+    open(p, "wb").write(bytes(raw))
+    with pytest.raises(ckpt_io.CheckpointError):
+        ckpt_io.restore(p, _tree(1))
+
+
+def test_checkpoint_legacy_format_loads(tmp_path):
+    # pre-checksum files packed the payload directly, no crc wrapper
+    p = str(tmp_path / "legacy.msgpack")
+    tree = _tree()
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    payload = {b"treedef": str(treedef).encode(),
+               b"leaves": [ckpt_io._pack_leaf(x) for x in flat]}
+    open(p, "wb").write(msgpack.packb(payload))
+    _assert_trees_bitwise(ckpt_io.restore(p, _tree(1)), tree)
+
+
+def test_load_latest_fallback_and_retain(tmp_path):
+    d = str(tmp_path)
+    for i in range(4):
+        ckpt_io.save(os.path.join(d, f"ck_{i:05d}.msgpack"), _tree(i),
+                     retain=3)
+    files = ckpt_io._checkpoint_files(d)
+    assert [os.path.basename(p) for p in files] == \
+        ["ck_00001.msgpack", "ck_00002.msgpack", "ck_00003.msgpack"]
+    # damage the newest -> load_latest warns and falls back to ck_00002
+    open(files[-1], "wb").write(b"\x00garbage")
+    with pytest.warns(RuntimeWarning):
+        tree, path = ckpt_io.load_latest(d, _tree(9))
+    assert path == files[-2]
+    _assert_trees_bitwise(tree, _tree(2))
+    # nothing loadable -> CheckpointError listing every file tried
+    for p in files:
+        open(p, "wb").write(b"")
+    with pytest.warns(RuntimeWarning), \
+            pytest.raises(ckpt_io.CheckpointError, match="no loadable"):
+        ckpt_io.load_latest(d, _tree(9))
+
+
+# ---------------------------------------------------------------------------
+# fault plan / event semantics
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_generate_deterministic():
+    a = FaultPlan.generate(5, n_events=4)
+    b = FaultPlan.generate(5, n_events=4)
+    assert a.describe() == b.describe()
+    c = FaultPlan.generate(6, n_events=4)
+    assert c.describe() != a.describe()
+
+
+def test_fault_event_validation_and_scenarios():
+    with pytest.raises(ValueError):
+        FaultEvent("meteor_strike", 0)
+    e = FaultEvent("straggler", 2, until=4, task=0)
+    assert [e.active(i) for i in range(5)] == \
+        [False, False, True, True, False]
+    topo = reference_pool()
+    for name in FAULT_SCENARIOS:
+        plan = fault_scenario(name, at=3, topo=topo)
+        assert plan.events, name
+    with pytest.raises(ValueError):
+        fault_scenario("nope")
+
+
+# ---------------------------------------------------------------------------
+# engine: determinism + transient retry
+# ---------------------------------------------------------------------------
+
+def test_fault_determinism_and_transient_retry():
+    def run_once():
+        trainer, topo, wf = make_trainer()
+        tt = train_task_id(wf)
+        inj = attach(trainer, FaultPlan([
+            FaultEvent("straggler", 1, until=3, task=0, factor=2.5),
+            FaultEvent("transient_crash", 2, until=3, task=tt,
+                       n_failures=2),
+        ], seed=0))
+        outs = run_iters(trainer, 4)
+        shape = [(e.iteration, e.task, e.kind)
+                 for e in trainer.engine.timeline]
+        return inj.log, shape, outs
+
+    before = obs_metrics.counter("engine.task_retries").value
+    log1, shape1, outs1 = run_once()
+    log2, shape2, outs2 = run_once()
+    # same seed, fresh engines -> identical injected-event sequence and
+    # identical Event-timeline shape
+    assert log1 == log2
+    assert shape1 == shape2
+    # the transient crash cost two retries and zero iterations: every
+    # iteration produced metrics
+    assert len(outs1) == 4
+    assert all("reward_mean" in r for r in outs1)
+    raises = [r for r in log1 if r["what"] == "raise_transient"]
+    assert [r["attempt"] for r in raises] == [0, 1]
+    assert obs_metrics.counter("engine.task_retries").value - before == 4
+    # the straggler window still produced normal GEN timeline events
+    assert any(i == 1 and t == 0 for (i, t, _k) in shape1)
+
+
+# ---------------------------------------------------------------------------
+# engine: permanent crash -> drop + forced replan
+# ---------------------------------------------------------------------------
+
+def test_permanent_crash_escalates_to_forced_replan(tmp_path):
+    trainer, topo, wf = make_trainer()
+    tt = train_task_id(wf)
+    inj = attach(trainer, fault_scenario("permanent_crash", at=1,
+                                         train_task=tt))
+    ctrl = ElasticController(
+        trainer, lambda it: topo,
+        ElasticConfig(budget=80, amortization_iters=5,
+                      ckpt_dir=str(tmp_path)))
+    rng = np.random.default_rng(0)
+    key = jax.random.PRNGKey(7)
+    done, step, forced, dead = 0, 0, None, set()
+    while done < 3:
+        prompts, answers = trainer.task.sample_batch(rng, 4)
+        key, k = jax.random.split(key)
+        try:
+            trainer.iteration(prompts, answers, k)
+        except TaskExecutionError as e:
+            assert e.permanent and e.task == tt and e.dead_devices
+            dead = set(e.dead_devices)
+            forced = ctrl.handle_failure(step, e)
+            continue
+        done += 1
+        step += 1
+    assert forced is not None and forced.forced and forced.applied
+    assert trainer.engine.epoch == 1
+    # the survivors' plan references no dead device
+    for t in range(wf.n_tasks):
+        assigned = {int(d) for d in trainer.plan.assignment[t].reshape(-1)}
+        assert not (assigned & dead)
+    # state was checkpointed around the forced swap
+    assert ckpt_io._checkpoint_files(str(tmp_path))
+    # the epoch change healed the fault: exactly one permanent raise
+    assert len(inj.fired("permanent_crash")) == 2  # activate + raise
+    assert [r["what"] for r in inj.fired("permanent_crash")] == \
+        ["activate", "raise_permanent"]
+
+
+# ---------------------------------------------------------------------------
+# elastic checkpointing under injected faults + bitwise crash-resume
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_fault_chain_and_bitwise_resume(tmp_path):
+    trainer, topo, wf = make_trainer()
+    ctrl = ElasticController(
+        trainer, lambda it: topo,
+        ElasticConfig(ckpt_dir=str(tmp_path), ckpt_retain=0))
+    run_iters(trainer, 2)
+    path1, nbytes = ctrl.checkpoint_now(1)
+    assert path1 and nbytes > 0
+    want_a = trainer.state_tree()
+    want_a = jax.tree_util.tree_map(lambda x: np.asarray(x).copy(), want_a)
+
+    run_iters(trainer, 1, seed=1)      # diverge past the checkpoint
+    want_b = jax.tree_util.tree_map(lambda x: np.asarray(x).copy(),
+                                    trainer.state_tree())
+
+    # (1) flaky write: two injected failures absorbed by retry
+    inj = FaultInjector(FaultPlan([
+        FaultEvent("ckpt_fail", 0, n_failures=2)]))
+    trainer.engine.attach_fault_injector(inj)
+    inj.begin_iteration(3)
+    r0 = obs_metrics.counter("checkpoint.retries").value
+    path3, _ = ctrl.checkpoint_now(3)
+    assert path3 and os.path.exists(path3)
+    assert obs_metrics.counter("checkpoint.retries").value - r0 == 2
+
+    # (2) persistently broken path: warn-and-continue, no file
+    inj = FaultInjector(FaultPlan([
+        FaultEvent("ckpt_fail", 0, n_failures=-1)]))
+    trainer.engine.attach_fault_injector(inj)
+    inj.begin_iteration(4)
+    f0 = obs_metrics.counter("checkpoint.failures").value
+    with pytest.warns(RuntimeWarning, match="checkpoint write failed"):
+        path4, nbytes4 = ctrl.checkpoint_now(4)
+    assert path4 is None and nbytes4 == 0
+    assert obs_metrics.counter("checkpoint.failures").value - f0 == 1
+
+    # (3) corrupted-on-disk newest checkpoint
+    inj = FaultInjector(FaultPlan([FaultEvent("ckpt_corrupt", 0)]))
+    trainer.engine.attach_fault_injector(inj)
+    inj.begin_iteration(5)
+    path5, _ = ctrl.checkpoint_now(5)
+    assert path5 and inj.fired("ckpt_corrupt")
+
+    # crash: a fresh process restores the newest *loadable* checkpoint —
+    # load_latest skips the corrupted iter-5 file and lands on iter-3
+    fresh, _, _ = make_trainer()
+    with pytest.warns(RuntimeWarning, match="skipping checkpoint"):
+        tree, path = ckpt_io.load_latest(str(tmp_path), fresh.state_tree())
+    assert path == path3
+    fresh.load_state_tree(tree)
+    _assert_trees_bitwise(fresh.state_tree(), want_b)
+    # the older restore point survives too (retain=0 keeps everything)
+    _assert_trees_bitwise(ckpt_io.restore(path1, fresh.state_tree()),
+                          want_a)
+
+
+# ---------------------------------------------------------------------------
+# reactive replan: undeclared throttle detected via divergence only
+# ---------------------------------------------------------------------------
+
+def test_link_throttle_reactive_replan():
+    trainer, topo, wf = make_trainer()
+    inj = attach(trainer, fault_scenario("link_throttle", at=3))
+    ctrl = ElasticController(
+        trainer, lambda it: topo,
+        ElasticConfig(budget=80, amortization_iters=5))
+    run_iters(trainer, 3)              # clean warmup for calibration
+    cal = obs_cal.fit_from_engine(trainer.engine)
+    monitor = obs_cal.DivergenceMonitor(threshold=2.0, sustain=2)
+    trainer.engine.attach_divergence_monitor(monitor, cal)
+    ctrl.monitor = monitor
+
+    reactive = None
+    for step in range(3, 10):
+        run_iters(trainer, 1, seed=step)
+        rec = ctrl.poll(step)
+        if rec is not None:
+            reactive = rec
+            break
+    assert reactive is not None, "divergence monitor never fired"
+    assert reactive.reactive and not reactive.forced
+    assert reactive.applied and trainer.engine.epoch == 1
+    assert inj.fired("link_throttle")
+    # detection came purely from measurements: the feed never changed
+    assert topology.topo_equal(ctrl._observed, topo)
+
+
+# ---------------------------------------------------------------------------
+# genserve: slot failure requeue + explicit cancel (strict leak checks)
+# ---------------------------------------------------------------------------
+
+P, N = 8, 6
+
+
+def _gs_setup():
+    cfg = ModelConfig(name="ft-gs", n_layers=2, d_model=64, n_heads=2,
+                      n_kv_heads=2, head_dim=32, d_ff=128,
+                      vocab_size=VOCAB_SIZE, dtype="float32",
+                      pattern=(LayerSpec(window=None),))
+    params = T.init_params(KEY, cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(3), (6, P), 0,
+                                 cfg.vocab_size, jnp.int32)
+    kw = dict(wave=4, max_new_tokens=N, eos_token=EOS, prefill_chunk=4,
+              greedy=True, page_size=4, prefix_cache=True)
+    return cfg, params, prompts, kw
+
+
+def test_slot_failure_requeues_without_leaks(monkeypatch):
+    monkeypatch.setenv("REPRO_OBS_STRICT", "1")
+    cfg, params, prompts, kw = _gs_setup()
+    ref, _ = serve(params, cfg, prompts, jax.random.PRNGKey(7),
+                   GenServeConfig(**kw))
+    got, stats = serve(params, cfg, prompts, jax.random.PRNGKey(7),
+                       GenServeConfig(**kw),
+                       slot_failures={2: [0, 1]})
+    assert stats["requeued"] == 2
+    assert stats["retired"] == 6 and stats["cancelled"] == 0
+    # greedy decode is deterministic per prompt: the requeued requests
+    # regenerate the exact rollout the undisturbed run produced — and
+    # strict mode already proved zero leaked pages at serve teardown
+    np.testing.assert_array_equal(np.asarray(ref["mask"]),
+                                  np.asarray(got["mask"]))
+    m = np.asarray(ref["mask"]).astype(np.int32)
+    np.testing.assert_array_equal(np.asarray(ref["gen_tokens"]) * m,
+                                  np.asarray(got["gen_tokens"]) * m)
+
+
+def test_cancel_retires_requests_without_leaks(monkeypatch):
+    monkeypatch.setenv("REPRO_OBS_STRICT", "1")
+    cfg, params, prompts, kw = _gs_setup()
+    ref, _ = serve(params, cfg, prompts, jax.random.PRNGKey(7),
+                   GenServeConfig(**kw))
+    # rid 2 is in flight (first wave), rid 5 is still queued (wave=4)
+    got, stats = serve(params, cfg, prompts, jax.random.PRNGKey(7),
+                       GenServeConfig(**kw),
+                       cancels={3: [2, 5]})
+    assert stats["cancelled"] == 2 and stats["requeued"] == 0
+    mask = np.asarray(got["mask"])
+    assert mask[2].sum() == 0 and mask[5].sum() == 0
+    keep = [0, 1, 3, 4]
+    np.testing.assert_array_equal(np.asarray(ref["mask"])[keep], mask[keep])
+    m = np.asarray(ref["mask"])[keep].astype(np.int32)
+    np.testing.assert_array_equal(
+        np.asarray(ref["gen_tokens"])[keep] * m,
+        np.asarray(got["gen_tokens"])[keep] * m)
