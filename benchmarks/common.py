@@ -11,6 +11,11 @@ RESULTS_DIR = os.environ.get("BENCH_RESULTS", "results/bench")
 # budgets so `python -m benchmarks.run` completes on one CPU core.
 QUICK = os.environ.get("BENCH_QUICK", "1") == "1"
 
+# base RNG seed benchmarks fold into their generators so repeated runs
+# can sample different workloads (``benchmarks.run --seed N``); 0 keeps
+# the historical fixed-seed behaviour bit-for-bit
+SEED = int(os.environ.get("BENCH_SEED", "0"))
+
 
 def emit(name: str, rows: List[Dict]) -> None:
     os.makedirs(RESULTS_DIR, exist_ok=True)

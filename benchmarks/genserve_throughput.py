@@ -44,6 +44,7 @@ Writes both the benchmark CSV and ``results/genserve_throughput.json``.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import json
 import os
@@ -63,7 +64,7 @@ from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.rl import rollout
 
-from benchmarks.common import QUICK, emit
+from benchmarks.common import QUICK, SEED, emit
 
 
 def _cfg():
@@ -170,7 +171,7 @@ def _admission_axis(quick, timed_best):
     params = T.init_params(jax.random.PRNGKey(0), cfg)
     prompts = jax.random.randint(jax.random.PRNGKey(4), (B, P_long), 0,
                                  cfg.vocab_size, jnp.int32)
-    rng = np.random.default_rng(7)
+    rng = np.random.default_rng(7 + SEED)
     gen_lens = np.minimum(rng.geometric(3.0 / N, B), N)   # long-tail
     useful = int(gen_lens.sum())
     mixes = {
@@ -268,7 +269,7 @@ def _prefix_axis(quick, timed_best):
     S = (P * 3) // 4                 # shared system-prompt tokens
     cfg = _cfg()
     params = T.init_params(jax.random.PRNGKey(0), cfg)
-    rng = np.random.default_rng(11)
+    rng = np.random.default_rng(11 + SEED)
     base = rng.integers(0, cfg.vocab_size, (n_prompts, P))
     grpo = np.tile(base, (k, 1))     # sample-major: wave 0 = 8 distinct
     shared = rng.integers(0, cfg.vocab_size, (B, P))
@@ -295,8 +296,12 @@ def _prefix_axis(quick, timed_best):
         res = {}
         for label, page, pfx in (("chunked", 0, False),
                                  (paged_label, ps, prefix)):
+            # best-of-4: the no-sharing trace gates a <= 5% overhead
+            # ratio of two separately-timed runs, inside container
+            # timing noise at best-of-2
             t, (ro, stats) = timed_best(
-                lambda page=page, pfx=pfx: run_engine(prompts, page, pfx))
+                lambda page=page, pfx=pfx: run_engine(prompts, page, pfx),
+                repeats=4)
             assert int(np.asarray(ro["mask"]).sum()) == useful
             _, ttft_stats = run_engine(prompts, page, pfx,
                                        measure_ttft=True)
@@ -337,6 +342,118 @@ def _prefix_axis(quick, timed_best):
     ns = js["no-sharing"]
     assert ns["prefix_hit_rate_paged"] == 0.0, ns
     assert ns["tok_s_ratio"] >= 0.95, ns
+    return rows, js
+
+
+def _speculative_axis(quick, timed_best):
+    """Draft-k speculative decoding vs the PR-6 paged chunked baseline.
+
+    The accept-rate axis, not a draft-quality axis: the target's
+    layers past the first are zeroed (the residual passes through
+    untouched, since a zero-weight rmsnorm and a zeroed FFN/attention
+    block contribute exactly 0), so a 1-layer draft built from the
+    target's own first layer agrees with it at essentially every
+    position — near-total acceptance, the regime speculation is for.
+    The 4-layer target against the 1-layer draft gives the 4x
+    depth ratio that makes proposals cheap relative to verification.  A fresh randomly
+    initialized 1-layer draft rides along as the low-quality
+    counterpoint (measured, not gated).  All runs are greedy, so the
+    speculative paths must emit the baseline's exact tokens — the
+    throughput comparison is over identical output.
+
+    Gates: the self-distilled draft must clear >= 1.3x useful tok/s
+    over the paged non-speculative baseline at its best k, and the cost
+    model's predicted speedup (``gen_speculative_wave`` at the measured
+    accept rate vs ``c_hbm``) must land within 2x of measured."""
+    from repro.core import enumerate as cm_enum
+    from repro.core import topology as topo_mod
+    from repro.core import workflow as wf_mod
+    from repro.core.costmodel import CostModel
+
+    wave = 8
+    B = 2 * wave
+    N = 24 if quick else 48
+    C = 32
+    P = 64
+    ps = 16
+    cfg = dataclasses.replace(_cfg(), name="genserve-spec-bench",
+                              n_layers=4, d_model=128, head_dim=32,
+                              d_ff=256)
+    params = T.init_params(jax.random.PRNGKey(SEED), cfg)
+    params = dict(params, blocks=jax.tree_util.tree_map(
+        lambda x: x.at[1:].set(0.0) if x.shape[0] == cfg.n_layers else x,
+        params["blocks"]))
+    dcfg = dataclasses.replace(cfg, name=f"{cfg.name}-draft", n_layers=1)
+    d_self = {"embed": params["embed"], "final_norm": params["final_norm"],
+              "blocks": jax.tree_util.tree_map(lambda x: x[:1],
+                                               params["blocks"])}
+    d_fresh = T.init_params(jax.random.PRNGKey(SEED + 3), dcfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(SEED + 4), (B, P), 0,
+                                 cfg.vocab_size, jnp.int32)
+    sampler = rollout.SamplerConfig(max_new_tokens=N, greedy=True)
+    useful = B * N
+
+    def run_engine(spec_k=0, dparams=None):
+        return genserve.generate(
+            params, cfg, prompts, jax.random.PRNGKey(2), sampler,
+            wave=wave, decode_chunk=1, prefill_chunk=C, page_size=ps,
+            spec_k=spec_k, draft_params=dparams,
+            draft_cfg=dcfg if spec_k else None, fast_path=False)
+
+    t_base, (ro_base, bstats) = timed_best(run_engine)
+    base_tokens = (np.asarray(ro_base["gen_tokens"])
+                   * np.asarray(ro_base["mask"]))
+    assert int(np.asarray(ro_base["mask"]).sum()) == useful
+    rows = [{"variant": "paged-baseline", "spec_k": 0, "accept_rate": 0.0,
+             "wall_s": t_base, "tok_s": useful / t_base, "speedup": 1.0,
+             "decode_rounds": bstats["decode_steps"]}]
+    js = {"spec_ks": [], "prompt_len": P, "new_tokens": N, "wave": wave,
+          "batch": B, "page_size": ps,
+          "baseline_tok_s": useful / t_base,
+          "baseline_decode_rounds": bstats["decode_steps"]}
+    variants = [("self-draft", k, d_self) for k in (2, 4, 8)]
+    variants.append(("fresh-draft", 4, d_fresh))
+    best_self = None
+    for name, k, dp in variants:
+        t, (ro, stats) = timed_best(lambda k=k, dp=dp: run_engine(k, dp))
+        # greedy speculation must be invisible in the tokens
+        np.testing.assert_array_equal(
+            np.asarray(ro["gen_tokens"]) * np.asarray(ro["mask"]),
+            base_tokens)
+        r = {"variant": name, "spec_k": k,
+             "accept_rate": stats["accept_rate"],
+             "wall_s": t, "tok_s": useful / t, "speedup": t_base / t,
+             "decode_rounds": stats["decode_steps"]}
+        rows.append(r)
+        js["spec_ks"].append(r)
+        if name == "self-draft" and (best_self is None
+                                     or r["speedup"] > best_self["speedup"]):
+            best_self = r
+
+    # cost-model prediction at the measured accept rate and best k
+    spec = wf_mod.LLMSpec.from_model_config(cfg)
+    wf = wf_mod.make_workflow("grpo", spec, synchronous=True,
+                              n_rollouts=2, seq_in=P, seq_out=N,
+                              global_batch=1)
+    topo = topo_mod.build_testbed("single_region",
+                                  counts={"A100": 2, "L4": 2})
+    plan = cm_enum.build_plan(topo, wf, (tuple(range(wf.n_tasks)),),
+                              [topo.n], list(range(topo.n)))
+    cm = CostModel(topo, wf)
+    gen_t = next(t for t in range(wf.n_tasks)
+                 if wf.task(t).kind == wf_mod.TaskKind.GEN)
+    pred = cm.c_hbm(plan, gen_t, 0, 0) / cm.gen_speculative_wave(
+        plan, gen_t, 0, 0, spec_k=best_self["spec_k"],
+        accept_rate=best_self["accept_rate"],
+        draft=wf_mod.LLMSpec.from_model_config(dcfg))
+    js.update({"best_speedup": best_self["speedup"],
+               "best_spec_k": best_self["spec_k"],
+               "best_accept_rate": best_self["accept_rate"],
+               "predicted_speedup": pred,
+               "predicted_vs_measured": pred / best_self["speedup"]})
+    # acceptance: >= 1.3x tok/s at high accept rate, prediction within 2x
+    assert best_self["speedup"] >= 1.3, js
+    assert 0.5 <= js["predicted_vs_measured"] <= 2.0, js
     return rows, js
 
 
@@ -384,7 +501,7 @@ def run(quick: bool = QUICK):
     js = {"wave": wave, "batch": B, "max_new_tokens": N,
           "prompt_len": P, "decode_chunk": chunk, "results": {}}
     for seed, dist in enumerate(("uniform", "bimodal", "long-tail")):
-        lens = _lengths(dist, B, N, np.random.default_rng(100 + seed))
+        lens = _lengths(dist, B, N, np.random.default_rng(100 + seed + SEED))
         useful = int(lens.sum())
 
         t_single, _ = timed_best(
@@ -450,10 +567,18 @@ def run(quick: bool = QUICK):
               f"ttft p50 x{r['ttft_p50_speedup']:.2f}, "
               f"hit rate {hit:.1%}")
 
+    spec_rows, spec_js = _speculative_axis(quick, timed_best)
+    js["speculative"] = spec_js
+    print(f"[speculative] best x{spec_js['best_speedup']:.2f} tok/s at "
+          f"k={spec_js['best_spec_k']} "
+          f"(accept {spec_js['best_accept_rate']:.1%}; cost model "
+          f"predicts x{spec_js['predicted_speedup']:.2f})")
+
     emit("genserve_throughput", rows)
     emit("genserve_decode_path", path_rows)
     emit("genserve_admission", adm_rows)
     emit("genserve_prefix", pfx_rows)
+    emit("genserve_speculative", spec_rows)
     os.makedirs("results", exist_ok=True)
     path = os.path.join("results", "genserve_throughput.json")
     with open(path, "w") as f:

@@ -82,7 +82,13 @@ def main() -> None:
     ap.add_argument("--only", default=None, metavar="NAME",
                     help="run only benchmarks whose name contains NAME "
                          "(e.g. genserve_throughput, fig3)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base RNG seed benchmarks fold into their "
+                         "generators (exported as BENCH_SEED; stamped "
+                         "into every summary entry)")
     args = ap.parse_args()
+    # must land before the benchmark modules import benchmarks.common
+    os.environ["BENCH_SEED"] = str(args.seed)
 
     from benchmarks import (elastic_redeploy, engine_throughput,
                             fault_recovery, fig3_e2e,
@@ -102,7 +108,7 @@ def main() -> None:
          obs_overhead.run),
         ("genserve_throughput",
          "continuous batching vs single-wave decode; chunked admission; "
-         "paged KV + prefix reuse",
+         "paged KV + prefix reuse; speculative decoding",
          genserve_throughput.run),
         ("fig3_e2e", "Figure 3: end-to-end throughput", fig3_e2e.run),
         ("fig4_loadbalance", "Figure 4: LB ablation", fig4_loadbalance.run),
@@ -120,6 +126,7 @@ def main() -> None:
             raise SystemExit(f"--only {args.only!r} matches no benchmark")
 
     meta = run_metadata()
+    meta["seed"] = args.seed
     failures = []
     statuses = {}
     for name, desc, fn in benches:

@@ -24,7 +24,7 @@ import numpy as np
 from repro.core.plan import (BYTES_BF16, MAX_DECODE_WAVE, PREFILL_CHUNK,
                              Plan, decode_wave)
 from repro.core.topology import Topology
-from repro.core.workflow import RLWorkflow, Task, TaskKind
+from repro.core.workflow import LLMSpec, RLWorkflow, Task, TaskKind
 
 
 # ---------------------------------------------------------------------------
@@ -124,7 +124,10 @@ _STATE_DIM = 64
 
 def flops_per_layer(task: Task, seq: int) -> float:
     """Per-sample per-layer forward FLOPs (Appendix B 'Computation')."""
-    m = task.model
+    return model_flops_per_layer(task.model, seq)
+
+
+def model_flops_per_layer(m: LLMSpec, seq: int) -> float:
     if m.attention_free:
         proj = 2 * 5 * seq * m.h1 * m.h1          # r,k,v,g,o projections
         attn = 2 * seq * m.h1 * _STATE_DIM        # linear-time state update
@@ -135,6 +138,52 @@ def flops_per_layer(task: Task, seq: int) -> float:
     mult = m.top_k if m.n_experts else 1
     mlp = 2 * 3 * seq * m.h1 * m.h2 * mult
     return qkvo + attn + mlp
+
+
+def speculative_expected_tokens(spec_k: int, accept_rate: float) -> float:
+    """Expected tokens emitted per draft/verify round: one bonus token
+    plus a geometric run of accepted drafts — ``(1 - a^(k+1)) / (1 - a)``
+    for per-token accept rate a, saturating at k+1."""
+    a = min(max(float(accept_rate), 0.0), 1.0)
+    k1 = int(spec_k) + 1
+    if a >= 1.0:
+        return float(k1)
+    return (1.0 - a ** k1) / (1.0 - a)
+
+
+def default_draft_spec(m: LLMSpec, ratio: int = 4) -> LLMSpec:
+    """Conventional draft for target `m`: same family, ``ratio`` x fewer
+    layers at half width (~1/16 the weight volume) — the shape of the
+    configs/archs tiny<->large pairs the serve path pairs up."""
+    return dataclasses.replace(
+        m, name=f"{m.name}-draft", n_layers=max(m.n_layers // ratio, 1),
+        h1=max(m.h1 // 2, 64), h2=max(m.h2 // 2, 64),
+        n_heads=max(m.n_heads // 2, 1) if m.n_heads else 0,
+        n_kv_heads=max(m.n_kv_heads // 2, 1) if m.n_kv_heads else 0)
+
+
+SPEC_K_CHOICES = (0, 2, 4, 8)
+
+
+def apply_speculative_best_response(cm: "CostModel", plan,
+                                    ks: Sequence[int] = SPEC_K_CHOICES):
+    """Pick the cheapest draft-k per GEN task and write it into
+    ``plan.gen_spec`` (0 = plain wave decode, left absent).
+
+    Speculative decoding is a *best response*, not a search dimension:
+    given any assignment, the cost model prices each k deterministically,
+    so every scheduler (SHA-EA decode, the ILP's leaf evaluation, a
+    hand-built plan) refines plans the same way — searches over the same
+    topology cannot disagree about spec and flip an incumbent."""
+    for t in range(cm.wf.n_tasks):
+        task = cm.wf.task(t)
+        if task.kind != TaskKind.GEN or task.model.attention_free:
+            continue
+        k = min(ks, key=lambda k: cm.gen_speculative_wave(plan, t, 0, 0,
+                                                          spec_k=k))
+        if k > 0:
+            plan.gen_spec[t] = k
+    return plan
 
 
 # ---------------------------------------------------------------------------
@@ -156,10 +205,17 @@ class CostModel:
     """Estimates per-task and end-to-end iteration time for a plan."""
 
     def __init__(self, topo: Topology, wf: RLWorkflow,
-                 eta: Optional[float] = None):
+                 eta: Optional[float] = None,
+                 spec_accept_rate: float = 0.7,
+                 draft_specs: Optional[Dict[int, LLMSpec]] = None):
         self.topo = topo
         self.wf = wf
         self.eta = eta  # None -> derive task parallelism from the plan
+        # speculative-decode operating point: per-token draft accept
+        # rate (calibrate from measured gen.spec_accept_rate) and the
+        # draft spec per GEN task (default: scaled-down target)
+        self.spec_accept_rate = spec_accept_rate
+        self.draft_specs = draft_specs or {}
 
     # -- per-replica micro-batching ------------------------------------
     def _nm_mbs(self, plan: Plan, t: int, i: int) -> Tuple[int, int]:
@@ -355,6 +411,79 @@ class CostModel:
             worst = max(worst, weights + kv)
         return worst
 
+    def gen_speculative_wave(self, plan: Plan, t: int, i: int = 0,
+                             j: int = 0, *, spec_k: Optional[int] = None,
+                             accept_rate: Optional[float] = None,
+                             draft: Optional[LLMSpec] = None) -> float:
+        """Decode cost of GEN replica i / stage j under draft-model
+        speculative decoding — the drop-in replacement for ``c_hbm``
+        when ``plan.gen_spec[t] > 0``.
+
+        One draft/verify round emits ``E = (1 - a^(k+1)) / (1 - a)``
+        tokens in expectation (per-token accept rate ``a``), so a slot
+        needs ``seq_out / E`` rounds instead of ``seq_out`` sequential
+        decode steps.  Per round, per tp shard:
+
+          * k+1 draft decode steps (k proposals plus the trailing step
+            that lands d_k's draft k/v for the bonus-token case) — the
+            draft's weight stream and its (small) per-slot KV read, HBM
+            roofline like ``c_hbm``, plus its (tiny) decode FLOPs;
+          * ONE target step over the ``[W, k+1]`` candidate chunk —
+            target weights stream once (the amortization that buys the
+            speedup), the resident KV is read once, and the chunk pays
+            (k+1)-token FLOPs including cache cross-attention (priced
+            like ``gen_prefill_chunk``'s chunk compute).
+
+        Draft terms scale by ``nl / n_layers`` so a pp-split target
+        charges the (replicated, unsplit) draft exactly once across its
+        stages.  Attention-free targets cannot run the verify step
+        (``cache.supports_speculative_target``) and fall back to
+        ``c_hbm``."""
+        task = self.wf.task(t)
+        if task.kind != TaskKind.GEN:
+            return 0.0
+        m = task.model
+        k = int(spec_k if spec_k is not None else plan.gen_spec.get(t, 0))
+        if k <= 0 or m.attention_free:
+            return self.c_hbm(plan, t, i, j)
+        a = float(accept_rate if accept_rate is not None
+                  else self.spec_accept_rate)
+        d = draft or self.draft_specs.get(t) or default_draft_spec(m)
+        E = speculative_expected_tokens(k, a)
+        dp, pp, tp = plan.parallel[t]
+        nm, mbs = self._nm_mbs(plan, t, i)
+        nl = plan.stage_layers(self.wf, t, j)
+        dbs = self.gen_decode_wave(plan, t, i)
+        n = nm * mbs
+        rounds = self.wf.seq_out * n / (dbs * E)   # waves x rounds/wave
+        kv_len = self.wf.seq_in + self.wf.seq_out / 2.0
+        kv_dim = (m.n_kv_heads * m.head_dim
+                  if m.n_kv_heads and m.head_dim else m.h1)
+        dkv_dim = (d.n_kv_heads * d.head_dim
+                   if d.n_kv_heads and d.head_dim else d.h1)
+        # draft replicated alongside each target stage: charge its cost
+        # proportionally so the stage sum pays the full draft once
+        dnl = d.n_layers * nl / max(m.n_layers, 1)
+        fl_chunk = model_flops_per_layer(m, k + 1) \
+            + 2 * 2 * (k + 1) * kv_len * m.h1      # cache cross-attention
+        dfl = model_flops_per_layer(d, 1) + 2 * 2 * kv_len * d.h1
+        worst = 0.0
+        for s in range(tp):
+            dev = int(plan.assignment[t][i, j, s])
+            hbm, comp = self.topo.hbm(dev), self.topo.comp(dev)
+            tgt_w = BYTES_BF16 * nl * m.layer_active_count / (hbm * tp)
+            tgt_kv = dbs * nl * 2.0 * kv_dim * BYTES_BF16 * kv_len \
+                / (hbm * tp)
+            tgt_c = dbs * nl * fl_chunk / (comp * tp)
+            drf_w = (k + 1) * BYTES_BF16 * dnl * d.layer_active_count \
+                / (hbm * tp)
+            drf_kv = (k + 1) * dbs * dnl * 2.0 * dkv_dim * BYTES_BF16 \
+                * kv_len / (hbm * tp)
+            drf_c = (k + 1) * dbs * dnl * dfl / (comp * tp)
+            worst = max(worst, tgt_w + tgt_kv + tgt_c
+                        + drf_w + drf_kv + drf_c)
+        return rounds * worst
+
     def c_bubble(self, plan: Plan, t: int, i: int) -> float:
         task = self.wf.task(t)
         if task.kind != TaskKind.TRAIN:
@@ -381,7 +510,10 @@ class CostModel:
                 comp = self.c_comp(plan, t, i, j)
                 ctp = self.c_tp(plan, t, i, j)
                 cpp = self.c_pp(plan, t, i, j)
-                chbm = self.c_hbm(plan, t, i, j)
+                if plan.gen_spec.get(t, 0) > 0:
+                    chbm = self.gen_speculative_wave(plan, t, i, j)
+                else:
+                    chbm = self.c_hbm(plan, t, i, j)
                 s = comp + ctp + cpp + chbm
                 if s > stage_max:
                     stage_max = s

@@ -24,7 +24,7 @@ import numpy as np
 
 from repro.core import enumerate as enum_mod
 from repro.core import loadbalance
-from repro.core.costmodel import CostModel
+from repro.core.costmodel import CostModel, apply_speculative_best_response
 from repro.core.plan import Plan, check_constraints, \
     feasible_parallelizations
 from repro.core.topology import Topology
@@ -59,6 +59,11 @@ class EvolutionarySearch:
         self._train_groups = {gi for gi, g in enumerate(grouping)
                               if any(wf.task(t).kind == TaskKind.TRAIN
                                      for t in g)}
+        # GEN tasks eligible for the speculative-decode gene (the verify
+        # step needs attention; cache.supports_speculative_target)
+        self._spec_tasks = [t for t in range(wf.n_tasks)
+                            if wf.task(t).kind == TaskKind.GEN
+                            and not wf.task(t).model.attention_free]
         self._ranked_cache: Dict[Tuple[int, int], List[Tuple[int, int, int]]] = {}
 
     # -- genome <-> plan -------------------------------------------------
@@ -71,10 +76,16 @@ class EvolutionarySearch:
 
     def decode(self, ind: Individual) -> Plan:
         order = {t: ind.order[t] for t in ind.order}
-        return enum_mod.build_plan(
+        plan = enum_mod.build_plan(
             self.topo, self.wf, self.grouping, self.sizes,
             ind.device_perm.tolist(), parallel=dict(ind.par),
             tasklet_order={t: o.tolist() for t, o in order.items()})
+        # speculative decoding is a best response, not a gene: given the
+        # assignment the genome proposes, pick the draft-k the cost
+        # model prices cheapest per GEN task (0 = off) — deterministic,
+        # so re-searching an unchanged topology cannot "discover" spec
+        # late and flip the incumbent (the ILP refines identically)
+        return apply_speculative_best_response(self.cm, plan)
 
     # -- init --------------------------------------------------------------
     def _random_individual(self) -> Individual:

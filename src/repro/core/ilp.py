@@ -37,7 +37,8 @@ import numpy as np
 
 from repro.core import enumerate as enum_mod
 from repro.core import loadbalance
-from repro.core.costmodel import CostModel, flops_per_layer
+from repro.core.costmodel import (CostModel, apply_speculative_best_response,
+                                  flops_per_layer)
 from repro.core.plan import (Plan, check_constraints, model_memory,
                              working_memory)
 from repro.core.sha import SearchResult
@@ -218,6 +219,10 @@ def ilp_scheduler(topo: Topology, wf: RLWorkflow, *,
                     ok, _ = check_constraints(topo, wf, plan)
                     if not ok:
                         continue
+                    # same deterministic spec refinement the EA's
+                    # decode applies — the two searches price the same
+                    # plan space
+                    plan = apply_speculative_best_response(cm, plan)
                     c = cm.cost(plan)
                     if c < best.cost:
                         best = SearchResult(plan, c, nodes, tg, tuple(sizes))
@@ -233,6 +238,8 @@ def ilp_scheduler(topo: Topology, wf: RLWorkflow, *,
                                                        for t in g})
                                     p2 = loadbalance.balance(topo, wf, p2)
                                     if check_constraints(topo, wf, p2)[0]:
+                                        p2 = apply_speculative_best_response(
+                                            cm, p2)
                                         c2 = cm.cost(p2)
                                         if c2 < best.cost:
                                             best = SearchResult(

@@ -134,6 +134,10 @@ class Plan:
         default_factory=dict)
     batch_fraction: Dict[int, Tuple[float, ...]] = dataclasses.field(
         default_factory=dict)
+    # GEN task -> draft-k for speculative decoding (absent/0 = plain
+    # wave decode); an alternative GEN parallelization the EA can toggle
+    # per device class — priced by CostModel.gen_speculative_wave.
+    gen_spec: Dict[int, int] = dataclasses.field(default_factory=dict)
 
     def group_of(self, task: int) -> TaskGroup:
         for g in self.groups:

@@ -12,8 +12,10 @@ so custom workflows can reuse the generic executor of a kind.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, Dict, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -46,6 +48,36 @@ def executor_for(task: Task) -> Callable:
 # GEN
 # ---------------------------------------------------------------------------
 
+def _draft_model(st):
+    """Resolve the speculative-decoding draft model for this trainer,
+    once (cached on ``st``): ``rl.draft_arch`` names a configs.archs
+    entry (vocab/dtype overridden to the target's so logits align), ""
+    derives a scaled-down full-attention copy of the target.  Weights
+    are freshly initialized — a deployment would load a trained draft
+    checkpoint; acceptance rate, not weight quality, is what the
+    repro's benchmarks vary."""
+    cached = getattr(st, "_spec_draft", None)
+    if cached is not None:
+        return cached
+    from repro.configs import archs
+    from repro.models import transformer as T
+    name = getattr(st.rl, "draft_arch", "")
+    cfg = st.cfg
+    if name:
+        dcfg = dataclasses.replace(
+            archs.get(name, smoke=cfg.n_layers <= 4),
+            vocab_size=cfg.vocab_size, dtype=cfg.dtype)
+    else:
+        pattern = tuple(dataclasses.replace(s, window=None)
+                        for s in cfg.pattern)
+        dcfg = dataclasses.replace(
+            cfg, name=f"{cfg.name}-draft", pattern=pattern,
+            n_layers=len(pattern) * max(cfg.n_pattern_repeats // 4, 1))
+    dparams = T.init_params(jax.random.PRNGKey(7), dcfg)
+    st._spec_draft = (dcfg, dparams)
+    return st._spec_draft
+
+
 @register(TaskKind.GEN)
 def run_generation(st, bb, placement):
     """Actor generation on the generation replica (pre-sync weights).
@@ -66,15 +98,21 @@ def run_generation(st, bb, placement):
     injector = bb.get("fault")
     slot_failures = injector.gen_slot_failures() \
         if injector is not None else None
+    spec_k = int(getattr(st.rl, "spec_k", 0))
+    draft_params, draft_cfg = None, None
+    if spec_k > 0:
+        draft_cfg, draft_params = _draft_model(st)
     use_engine = mode == "genserve" or (mode == "auto" and B > wave) \
-        or slot_failures is not None
+        or slot_failures is not None or spec_k > 0
     with placement.mesh:
         if use_engine:
             ro, stats = genserve.generate(
                 st.gen_params, st.cfg, prompts, bb["rng"], st.sampler,
                 wave=wave, decode_chunk=getattr(st.rl, "decode_chunk", 1),
                 prefill_chunk=getattr(st.rl, "prefill_chunk", 0),
-                fast_path=False, slot_failures=slot_failures)
+                fast_path=False, slot_failures=slot_failures,
+                spec_k=spec_k, draft_params=draft_params,
+                draft_cfg=draft_cfg)
         else:
             ro = st._generate(st.gen_params, prompts=prompts,
                               rng=bb["rng"])

@@ -71,7 +71,9 @@ def generate(params, cfg: ModelConfig, prompts, rng,
              prefix_cache: bool = False, pool_pages: int = 0,
              sjf_aging: int = 0,
              slot_failures: Optional[Dict[int, Sequence[int]]] = None,
-             cancels: Optional[Dict[int, Sequence[int]]] = None
+             cancels: Optional[Dict[int, Sequence[int]]] = None,
+             spec_k: int = 0, draft_params=None,
+             draft_cfg: Optional[ModelConfig] = None
              ) -> Tuple[Dict[str, jnp.ndarray], Dict[str, object]]:
     """Continuous-batching generation with the rollout contract.
 
@@ -91,11 +93,14 @@ def generate(params, cfg: ModelConfig, prompts, rng,
     ``slot_failures`` / ``cancels`` (round -> slot ids / request ids)
     inject mid-wave slot deaths and explicit request cancels; either
     forces the engine path (the single-wave scan has no slots to fail).
+    ``spec_k > 0`` turns on draft-model speculative decoding (requires
+    ``draft_params`` + ``draft_cfg``) — always the engine path: the
+    draft/verify sub-round is a wave-step program.
     """
     B = int(np.asarray(prompts).shape[0])
     W = int(wave) if wave else plan_mod.decode_wave(B)
     if fast_path and gen_lens is None and prefill_chunk == 0 \
-            and page_size == 0 and B <= W \
+            and page_size == 0 and B <= W and spec_k == 0 \
             and not slot_failures and not cancels:
         ro = rollout.generate(params, cfg, jnp.asarray(prompts), rng,
                               sampler)
@@ -108,7 +113,8 @@ def generate(params, cfg: ModelConfig, prompts, rng,
                           prefill_chunk=prefill_chunk,
                           measure_ttft=measure_ttft, page_size=page_size,
                           prefix_cache=prefix_cache, pool_pages=pool_pages,
-                          sjf_aging=sjf_aging)
+                          sjf_aging=sjf_aging, spec_k=spec_k)
     return serve(params, cfg, prompts, rng, gcfg, gen_lens=gen_lens,
                  prompt_lens=prompt_lens, slot_failures=slot_failures,
-                 cancels=cancels)
+                 cancels=cancels, draft_params=draft_params,
+                 draft_cfg=draft_cfg)

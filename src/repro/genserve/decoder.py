@@ -44,6 +44,28 @@ Device-side execution is a small set of jitted, fixed-shape programs per
                                               sample, record, retire on
                                               EOS / budget.
 
+With ``spec_k > 0`` the decode half of every sub-round (in both the
+``chunk`` and ``mixed`` programs) becomes the **draft/verify
+sub-round**: k+1 autoregressive draft-model decode steps propose
+d_1..d_k per live slot (the trailing step's proposal is discarded —
+it runs so d_k's draft k/v lands for the full-accept-plus-bonus case;
+the draft keeps its own small full-attention per-slot cache
+``st["dcache"]`` in the slot lifecycle, always at the target's
+position), then ONE batched target step over the [W, k+1]
+candidate chunk ``[tok, d_1..d_k]`` verifies them
+(``transformer.verify_chunk_step`` — all-position logits, cache left
+untouched).  Greedy: exact longest-prefix match against the target
+argmax; sampled: standard rejection-resampling, so the emitted-token
+distribution is exactly the target's.  The accepted prefix plus the
+bonus/corrected token (up to k+1 tokens) lands through the chunked
+variable-length write machinery — validity-masked ``cache.write_kv``
+at per-row cursors, ``paged_update_chunk`` on the paged pool — so ring
+windows, GQA, recycled slots and prefix sharing all carry over.  On
+the chunked-admission path the draft ingests the *full* prompt in its
+own chunk cursor (``st["dcur"]``; it has no radix cache), while a
+prefix-cache target skips ahead — ``st["pdelay"]`` idles the target's
+prefill so both cursors land on the same sub-round.
+
 Static-shape rules: every program's operand shapes depend only on
 (W, P, C, N, n_reqs) plus, for ``mixed``, the scan length k — a value
 in {1..decode_chunk}, so at most ``decode_chunk`` program variants
@@ -166,6 +188,15 @@ class GenServeConfig:
     sjf_aging: int = 0               # sjf anti-starvation: admit a
     #                                  passed-over request after at most
     #                                  this many pops (0 = pure sjf)
+    spec_k: int = 0                  # speculative decoding: draft tokens
+    #                                  proposed per wave sub-round (0 =
+    #                                  off).  Requires a draft model
+    #                                  (``serve(draft_params=,
+    #                                  draft_cfg=)``); the target must
+    #                                  satisfy
+    #                                  ``cache.supports_speculative_target``
+    #                                  and the draft the stricter
+    #                                  ``cache.supports_speculative_draft``.
 
     def validate(self) -> None:
         assert self.wave >= 1 and self.max_new_tokens >= 1
@@ -175,6 +206,11 @@ class GenServeConfig:
         assert self.prefill_chunk >= 0
         assert self.page_size >= 0 and self.pool_pages >= 0
         assert self.sjf_aging >= 0
+        assert self.spec_k >= 0
+        if self.spec_k > 0:
+            # the spec sub-round is one natively batched verify step
+            assert self.decode_path == "batched", \
+                "spec_k > 0 requires the batched decode path"
         if self.page_size > 0:
             # paged KV rides the chunked-admission machinery (per-slot
             # cursors, install/mixed programs)
@@ -224,7 +260,8 @@ def _wave_decode_vmapped(params, cfg: ModelConfig, tok, pos, blocks):
 
 @functools.lru_cache(maxsize=64)
 def _build_fns(cfg: ModelConfig, gcfg: GenServeConfig, prompt_len: int,
-               n_reqs: int, impl: str = "jnp"):
+               n_reqs: int, impl: str = "jnp",
+               draft_cfg: Optional[ModelConfig] = None):
     # `impl` (the active models.attention implementation) is part of the
     # cache key only: tracing reads the global impl at first call, so a
     # cached jitted fn built under "jnp" must not be reused under
@@ -235,6 +272,11 @@ def _build_fns(cfg: ModelConfig, gcfg: GenServeConfig, prompt_len: int,
     ps = gcfg.page_size
     paged = ps > 0
     max_seq = prompt_len + N
+    spec_k = gcfg.spec_k
+    spec = spec_k > 0
+    k1 = spec_k + 1                  # candidate-chunk width [tok, d_1..d_k]
+    assert not spec or draft_cfg is not None, \
+        "spec_k > 0 requires a draft model config"
     # without prefix sharing the block table is the identity mapping
     # forever (install always writes identity rows), so the pool view is
     # a pure reshape — no gather, ~zero overhead over contiguous
@@ -253,13 +295,21 @@ def _build_fns(cfg: ModelConfig, gcfg: GenServeConfig, prompt_len: int,
                                       temperature=gcfg.temperature,
                                       greedy=gcfg.greedy)
 
-    def admit(params, state, prompts, admit_mask, rows, limits, key):
+    def sample_lp(key, logits):
+        """(tokens, logprobs) at the engine's temperature — the shared
+        sampling point of every program (models.sampling owns the
+        temperature/greedy semantics)."""
+        return sampling.sample_with_logprobs(key, logits,
+                                             temperature=gcfg.temperature,
+                                             greedy=gcfg.greedy)
+
+    def admit(params, dparams, state, prompts, admit_mask, rows, limits,
+              key):
         """Prefill [W, P] prompts; install admitted slots; sample token 0."""
         out = T.forward(params, cfg, {"tokens": prompts}, return_cache=True,
                         max_cache_len=prompt_len + N, remat=False)
         logits0 = out["logits"][:, -1]
-        tok0 = sample(key, logits0)
-        lp0 = sampling.token_logprobs(logits0, tok0)
+        tok0, lp0 = sample_lp(key, logits0)
         alive0 = sampling.initial_alive(prompts, eos) & admit_mask
         finished0 = limits <= 1
         if eos is not None:
@@ -281,6 +331,14 @@ def _build_fns(cfg: ModelConfig, gcfg: GenServeConfig, prompt_len: int,
         st["limit"] = jnp.where(admit_mask, limits, state["limit"])
         st["occupied"] = jnp.where(admit_mask, alive0 & ~finished0,
                                    state["occupied"])
+        if spec:
+            # prime the draft's own per-slot cache on the same prompts:
+            # its position cursor stays identical to the target's
+            dout = T.forward(dparams, draft_cfg, {"tokens": prompts},
+                             return_cache=True,
+                             max_cache_len=prompt_len + N, remat=False)
+            st["dcache"] = cache_mod.scatter_slots(
+                state["dcache"], dout["cache"]["blocks"], admit_mask)
         return st
 
     wave_decode = (_wave_decode_batched if gcfg.decode_path == "batched"
@@ -298,8 +356,7 @@ def _build_fns(cfg: ModelConfig, gcfg: GenServeConfig, prompt_len: int,
         is moot and freed pages stay untouched."""
         logits, new_blocks = wave_decode(params, cfg, st["tok"],
                                          st["pos"], view_of(st))
-        nxt = sample(key, logits)
-        lp = sampling.token_logprobs(logits, nxt)
+        nxt, lp = sample_lp(key, logits)
         emit = st["occupied"]
         buf_rows = jnp.where(emit, st["req"], dummy_row)
         cols = jnp.where(emit, st["ngen"], 0)
@@ -325,11 +382,127 @@ def _build_fns(cfg: ModelConfig, gcfg: GenServeConfig, prompt_len: int,
         st["occupied"] = emit & ~finished
         return st, jnp.sum(emit.astype(jnp.int32))
 
-    def chunk(params, state, keys):
-        """`decode_chunk` wave steps; returns per-step active counts."""
+    def _commit_accepted(view_blocks, deltas, pos, n_valid):
+        """Write the accepted prefix of a verify chunk into the
+        contiguous (or contiguous-view) cache: per-layer validity-masked
+        ``write_kv`` at per-row cursors.  Rows with ``n_valid == 0`` take
+        no writes at all, so mid-prefill / free slots are protected for
+        free and rejected speculative k/v never lands."""
+        valid = jnp.arange(k1)[None, :] < n_valid[:, None]
+        out = {}
+        for j, spec_l in enumerate(cfg.pattern):
+            w = cache_mod.effective_window(cfg, spec_l, False)
+            lk = f"layer{j}"
+            nk, nv = jax.vmap(
+                lambda a, b, c, d, w=w: cache_mod.write_kv(
+                    a, b, c, d, pos, w, valid=valid))(
+                view_blocks[lk]["k"], view_blocks[lk]["v"],
+                deltas[lk]["k"], deltas[lk]["v"])
+            out[lk] = {"k": nk, "v": nv}
+        return out
+
+    def spec_substep(params, dparams, st, key, protect: bool):
+        """The draft/verify sub-round: k draft decode steps propose
+        d_1..d_k per live slot, ONE batched target step over the
+        [W, k+1] candidate chunk verifies them, and up to k+1 tokens
+        (accepted prefix + bonus/corrected token) land at once through
+        the variable-length chunk-write machinery.  The commit is
+        inherently emit-masked (``n_valid == 0`` rows take no writes),
+        so ``protect`` is moot — mid-prefill rows are safe either way.
+
+        The draft keeps its own full-attention cache at the target's
+        position: after committing e tokens, draft positions
+        pos..pos+e-1 hold exactly the tokens the target committed, and
+        stale entries beyond are masked invalid (and overwritten before
+        read) in a full cache — the rollback-free invariant
+        ``cache.supports_speculative_draft`` guarantees."""
+        emit = st["occupied"]
+        pos = st["pos"]
+        keys = jax.random.split(key, spec_k + 2)
+
+        def propose(carry, kk):
+            tok_c, dblocks, dpos = carry
+            logits, new = T.decode_step(dparams, draft_cfg, tok_c[:, None],
+                                        {"blocks": dblocks, "pos": dpos})
+            nxt = sample(kk, logits)
+            return (nxt, new["blocks"], dpos + 1), (nxt, logits)
+
+        # k+1 draft steps for k proposals: the extra step's proposal is
+        # discarded, but it writes d_k's draft k/v — without it the
+        # full-accept-plus-bonus round (e == k+1) leaves a hole at
+        # pos+k that the draft would attend to on every later round
+        (_, dblocks, _), (drafts, dlogits) = jax.lax.scan(
+            propose, (st["tok"], st["dcache"], pos), keys[:spec_k + 1])
+        drafts = jnp.swapaxes(drafts, 0, 1)[:, :spec_k]      # [W, k]
+        dlogits = jnp.swapaxes(dlogits, 0, 1)[:, :spec_k]    # [W, k, V]
+
+        view = view_of(st)
+        cand_in = jnp.concatenate([st["tok"][:, None], drafts], axis=1)
+        vlogits, deltas = T.verify_chunk_step(
+            params, cfg, cand_in, {"blocks": view, "pos": pos})
+        a, cand = sampling.speculative_accept(
+            keys[spec_k + 1], vlogits, drafts, dlogits,
+            temperature=gcfg.temperature, greedy=gcfg.greedy)
+
+        # effective emit count e: accepted + bonus, cut at the remaining
+        # budget and at the first emitted EOS (the EOS itself is valid)
+        e = jnp.minimum(a + 1, jnp.maximum(st["limit"] - st["ngen"], 0))
+        if eos is not None:
+            first_eos = jnp.min(
+                jnp.where(cand == eos, jnp.arange(k1)[None, :], k1 + N),
+                axis=1)
+            e = jnp.minimum(e, first_eos + 1)
+        e = jnp.where(emit, e, 0)
+        hit_eos = (first_eos < e) if eos is not None \
+            else jnp.zeros_like(emit)
+        finished = emit & (hit_eos | (st["ngen"] + e >= st["limit"]))
+
+        ar = jnp.arange(k1)[None, :]
+        val = (ar < e[:, None]) & emit[:, None]        # [W, k+1]
+        buf_rows = jnp.where(val, st["req"][:, None], dummy_row)
+        cols = jnp.where(val, st["ngen"][:, None] + ar, 0)
+        lp_all = sampling.token_logprobs(vlogits, cand)
+        st = dict(st)
+        st["gen"] = st["gen"].at[buf_rows, cols].set(
+            jnp.where(val, cand, 0), mode="drop")
+        st["lp"] = st["lp"].at[buf_rows, cols].set(
+            jnp.where(val, lp_all, 0.0), mode="drop")
+        st["mask"] = st["mask"].at[buf_rows, cols].set(
+            val.astype(jnp.float32), mode="drop")
+
+        committed = _commit_accepted(view, deltas, pos, e)
+        if paged:
+            st["cache"] = cache_mod.paged_update_chunk(
+                cfg, st["cache"], committed, st["btab"], pos, e, k1,
+                max_seq, page_size=ps)
+        else:
+            st["cache"] = committed
+        st["dcache"] = cache_mod.scatter_slots(st["dcache"], dblocks, emit)
+
+        new_tok = jnp.take_along_axis(
+            cand, jnp.clip(e - 1, 0, spec_k)[:, None], axis=1)[:, 0]
+        st["tok"] = jnp.where(emit, new_tok, st["tok"])
+        st["pos"] = pos + e
+        st["ngen"] = st["ngen"] + e
+        st["occupied"] = emit & ~finished
+        emit_n = jnp.sum(emit.astype(jnp.int32))
+        return st, (emit_n, jnp.sum(e), emit_n * spec_k,
+                    jnp.sum(jnp.where(emit, a, 0)))
+
+    def chunk(params, dparams, state, keys):
+        """`decode_chunk` wave steps; returns per-step active counts
+        (speculative: (active, emitted-token, proposed, accepted)
+        per-step counts)."""
+        if spec:
+            return jax.lax.scan(
+                lambda st, key: spec_substep(params, dparams, st, key,
+                                             protect=False),
+                state, keys)
         return jax.lax.scan(
             lambda st, key: decode_substep(params, st, key, protect=False),
             state, keys)
+
+    C = max(gcfg.prefill_chunk, 1)
 
     def install(state, prompts, admit_mask, rows, limits, plens,
                 pstarts=None, btab_new=None):
@@ -359,6 +532,20 @@ def _build_fns(cfg: ModelConfig, gcfg: GenServeConfig, prompt_len: int,
         else:
             st["pcur"] = jnp.where(admit_mask, 0, state["pcur"])
             st["cache"] = cache_mod.zero_slots(state["cache"], admit_mask)
+        if spec:
+            # the draft has no radix cache: it ingests the full prompt
+            # from cursor 0, while a prefix-cache target starts after the
+            # cached prefix.  Idle the target's prefill for the chunk-
+            # count difference so both cursors land on the same sub-round
+            # (the landing logits must come from the target's real final
+            # chunk).
+            st["dcur"] = jnp.where(admit_mask, 0, state["dcur"])
+            st["dcache"] = cache_mod.zero_slots(state["dcache"],
+                                                admit_mask)
+            ncd = (st["plen"] + C - 1) // C
+            nct = (st["plen"] - st["pcur"] + C - 1) // C
+            st["pdelay"] = jnp.where(admit_mask, ncd - nct,
+                                     state["pdelay"])
         return st
 
     def copy(state, src, dst):
@@ -368,16 +555,19 @@ def _build_fns(cfg: ModelConfig, gcfg: GenServeConfig, prompt_len: int,
         st["cache"] = cache_mod.copy_pages(cfg, state["cache"], src, dst)
         return st
 
-    C = max(gcfg.prefill_chunk, 1)
-
-    def prefill_substep(params, st, k_land):
+    def prefill_substep(params, dparams, st, k_land):
         """The prefill half of one mixed sub-round: one [W, C] prompt
         chunk over the admitting slots (masked), landing any slot whose
-        final chunk just arrived (first token sampled from k_land)."""
+        final chunk just arrived (first token sampled from k_land).
+        Speculative engines additionally advance the draft's own prompt
+        cursor (full prompt, no prefix skip) and hold the target idle
+        while ``pdelay > 0`` so both cursors finish together."""
         st = dict(st)
         pf = st["prefilling"]
         pcur = st["pcur"]
-        n_valid = jnp.where(pf, jnp.clip(st["plen"] - pcur, 0, C), 0)
+        idle = (st["pdelay"] > 0) if spec else jnp.zeros_like(pf)
+        n_valid = jnp.where(pf & ~idle,
+                            jnp.clip(st["plen"] - pcur, 0, C), 0)
         idx = jnp.clip(pcur[:, None] + jnp.arange(C), 0,
                        st["prompt"].shape[1] - 1)
         chunk_tok = jnp.take_along_axis(st["prompt"], idx, axis=1)
@@ -394,8 +584,23 @@ def _build_fns(cfg: ModelConfig, gcfg: GenServeConfig, prompt_len: int,
                                               pf_cache["blocks"], prow)
 
         land = pf & (pcur + n_valid >= st["plen"])
-        tok0 = sample(k_land, last_logits)
-        lp0 = sampling.token_logprobs(last_logits, tok0)
+        if spec:
+            dcur = st["dcur"]
+            n_valid_d = jnp.where(pf, jnp.clip(st["plen"] - dcur, 0, C), 0)
+            idx_d = jnp.clip(dcur[:, None] + jnp.arange(C), 0,
+                             st["prompt"].shape[1] - 1)
+            dtok = jnp.take_along_axis(st["prompt"], idx_d, axis=1)
+            _, d_cache = T.prefill_chunk_step(
+                dparams, draft_cfg, dtok,
+                {"blocks": st["dcache"], "pos": dcur}, n_valid=n_valid_d)
+            st["dcache"] = cache_mod.scatter_slots(
+                st["dcache"], d_cache["blocks"], n_valid_d > 0)
+            st["dcur"] = dcur + n_valid_d
+            st["pdelay"] = jnp.where(pf & idle, st["pdelay"] - 1,
+                                     st["pdelay"])
+            land = land & (st["dcur"] >= st["plen"])
+            prow = prow | (n_valid_d > 0)
+        tok0, lp0 = sample_lp(k_land, last_logits)
         last_prompt_tok = jnp.take_along_axis(
             st["prompt"], jnp.clip(st["plen"] - 1, 0, None)[:, None],
             axis=1)[:, 0]
@@ -417,7 +622,7 @@ def _build_fns(cfg: ModelConfig, gcfg: GenServeConfig, prompt_len: int,
                                    st["occupied"])
         return st, jnp.sum(prow.astype(jnp.int32))
 
-    def mixed(params, state, k_decodes, k_lands):
+    def mixed(params, dparams, state, k_decodes, k_lands):
         """The mixed wave-step: a scan of sub-rounds, each ONE batched
         decode step over decoding slots (cache rows of admitting slots
         protected) plus ONE [W, C] prefill chunk over admitting slots —
@@ -433,16 +638,34 @@ def _build_fns(cfg: ModelConfig, gcfg: GenServeConfig, prompt_len: int,
 
         def sub(st, keys2):
             k_d, k_l = keys2
-            st, d = decode_substep(params, st, k_d, protect=True)
-            st, p = prefill_substep(params, st, k_l)
+            if spec:
+                st, d = spec_substep(params, dparams, st, k_d,
+                                     protect=True)
+            else:
+                st, d = decode_substep(params, st, k_d, protect=True)
+            st, p = prefill_substep(params, dparams, st, k_l)
             return st, (d, p)
 
         st, (d_counts, p_counts) = jax.lax.scan(
             sub, dict(state), (k_decodes, k_lands))
         return st, (d_counts, p_counts)
 
-    return (jax.jit(admit), jax.jit(chunk), jax.jit(install),
-            jax.jit(mixed), jax.jit(copy))
+    if spec:
+        return (jax.jit(admit), jax.jit(chunk), jax.jit(install),
+                jax.jit(mixed), jax.jit(copy))
+    # signature-stable non-speculative programs: no dparams operand, so
+    # existing call sites (and the jit caches keyed on them) are
+    # untouched when spec_k == 0
+    return (
+        jax.jit(lambda params, state, prompts, admit_mask, rows, limits,
+                key: admit(params, None, state, prompts, admit_mask,
+                           rows, limits, key)),
+        jax.jit(lambda params, state, keys: chunk(params, None, state,
+                                                  keys)),
+        jax.jit(install),
+        jax.jit(lambda params, state, k_decodes, k_lands: mixed(
+            params, None, state, k_decodes, k_lands)),
+        jax.jit(copy))
 
 
 def _pool_pages(cfg: ModelConfig, gcfg: GenServeConfig,
@@ -464,7 +687,8 @@ def _pool_pages(cfg: ModelConfig, gcfg: GenServeConfig,
 
 
 def _init_state(cfg: ModelConfig, gcfg: GenServeConfig, prompt_len: int,
-                n_reqs: int) -> Dict[str, object]:
+                n_reqs: int, draft_cfg: Optional[ModelConfig] = None
+                ) -> Dict[str, object]:
     W, N = gcfg.wave, gcfg.max_new_tokens
     if gcfg.page_size > 0:
         MP, NP = _pool_pages(cfg, gcfg, prompt_len)
@@ -508,6 +732,18 @@ def _init_state(cfg: ModelConfig, gcfg: GenServeConfig, prompt_len: int,
         })
     if btab is not None:
         st["btab"] = btab
+    if gcfg.spec_k > 0:
+        assert draft_cfg is not None
+        # the draft's per-slot state: small contiguous full-attention
+        # cache (never paged — it is a fraction of the target's
+        # footprint) plus, under chunked admission, its own prompt
+        # cursor and the target's prefix-skip idle counter
+        st["dcache"] = cache_mod.init_cache(
+            draft_cfg, W, prompt_len + N,
+            dtype=jnp.dtype(draft_cfg.dtype))["blocks"]
+        if gcfg.prefill_chunk > 0:
+            st["dcur"] = jnp.zeros((W,), jnp.int32)
+            st["pdelay"] = jnp.zeros((W,), jnp.int32)
     return st
 
 
@@ -519,7 +755,8 @@ def serve(params, cfg: ModelConfig, prompts, rng, gcfg: GenServeConfig,
           gen_lens: Optional[Sequence[int]] = None,
           prompt_lens: Optional[Sequence[int]] = None,
           slot_failures: Optional[Dict[int, Sequence[int]]] = None,
-          cancels: Optional[Dict[int, Sequence[int]]] = None
+          cancels: Optional[Dict[int, Sequence[int]]] = None,
+          draft_params=None, draft_cfg: Optional[ModelConfig] = None
           ) -> Tuple[Dict[str, jnp.ndarray], Dict[str, object]]:
     """Generate for all `prompts` [B, P] with continuous batching.
 
@@ -547,6 +784,20 @@ def serve(params, cfg: ModelConfig, prompts, rng, gcfg: GenServeConfig,
       no budget exhaustion): dequeued if pending, evicted + zeroed if
       in-flight; their output rows are all-zero with an all-zero mask."""
     gcfg.validate()
+    spec = gcfg.spec_k > 0
+    if spec:
+        assert draft_params is not None and draft_cfg is not None, \
+            "spec_k > 0 requires draft_params and draft_cfg"
+        assert cache_mod.supports_speculative_target(cfg), (
+            "speculative decoding requires an attention-only target "
+            "without rwkv_channel FFNs: recurrent state cannot roll "
+            "back rejected tokens")
+        assert cache_mod.supports_speculative_draft(draft_cfg), (
+            "the draft must be full-window attention-only: its cache "
+            "takes pre-acceptance writes that only a full (non-ring) "
+            "layout can mask out after rollback")
+        assert draft_cfg.vocab_size == cfg.vocab_size, \
+            "draft and target must share a vocabulary"
     prompts_np = np.asarray(prompts, np.int32)
     B, P = prompts_np.shape
     N, W = gcfg.max_new_tokens, gcfg.wave
@@ -586,8 +837,10 @@ def serve(params, cfg: ModelConfig, prompts, rng, gcfg: GenServeConfig,
     # flipping instrumentation never recompiles the device programs
     fns_cfg = dataclasses.replace(gcfg, measure_ttft=False)
     admit_fn, chunk_fn, install_fn, mixed_fn, copy_fn = _build_fns(
-        cfg, fns_cfg, P, B, attn_mod.get_attention_impl())
-    state = _init_state(cfg, fns_cfg, P, B)
+        cfg, fns_cfg, P, B, attn_mod.get_attention_impl(),
+        draft_cfg if spec else None)
+    state = _init_state(cfg, fns_cfg, P, B, draft_cfg if spec else None)
+    spec_tokens = spec_proposed = spec_accepted = 0
 
     # rngs[t] drives the t-th sampling event, mirroring rollout.generate:
     # the first admission consumes rngs[0] (at its landing round when
@@ -729,7 +982,11 @@ def serve(params, cfg: ModelConfig, prompts, rng, gcfg: GenServeConfig,
                         slot_pages[s] = row
                         slot_tokens[s] = toks
                         table.record_prefix(pstart, p)
-                        prefill_left[s] = -(-(p - pstart) // C)
+                        # speculative: the draft ingests the full prompt
+                        # (no radix cache), so its chunk count paces the
+                        # slot; the target idles for the difference
+                        prefill_left[s] = -(-p // C) if spec \
+                            else -(-(p - pstart) // C)
                     if copy_src:
                         src = np.full((W,), NP, np.int32)
                         dst = np.full((W,), NP, np.int32)
@@ -753,8 +1010,12 @@ def serve(params, cfg: ModelConfig, prompts, rng, gcfg: GenServeConfig,
             else:
                 key = rngs[0] if next_key == 0 \
                     else jax.random.fold_in(side_admit, round_idx)
-                state = admit_fn(params, state, pb, admit_mask, rows, lim,
-                                 key)
+                if spec:
+                    state = admit_fn(params, draft_params, state, pb,
+                                     admit_mask, rows, lim, key)
+                else:
+                    state = admit_fn(params, state, pb, admit_mask, rows,
+                                     lim, key)
                 next_key = max(next_key, 1)
                 if gcfg.measure_ttft:
                     # first tokens exist once the admit program completes
@@ -824,8 +1085,17 @@ def serve(params, cfg: ModelConfig, prompts, rng, gcfg: GenServeConfig,
                 else jax.random.fold_in(side_admit,
                                         round_idx * (K + 1) + j)
                 for j in range(k_len)])
-            with obs_trace.span("gen.mixed", subrounds=k_len):
-                state, (d, p) = mixed_fn(params, state, keys, k_lands)
+            with obs_trace.span("gen.mixed", subrounds=k_len,
+                                spec_k=gcfg.spec_k):
+                if spec:
+                    state, (d4, p) = mixed_fn(params, draft_params,
+                                              state, keys, k_lands)
+                    d, toks, props, accs = d4
+                    spec_tokens += int(np.asarray(toks).sum())
+                    spec_proposed += int(np.asarray(props).sum())
+                    spec_accepted += int(np.asarray(accs).sum())
+                else:
+                    state, (d, p) = mixed_fn(params, state, keys, k_lands)
                 counts = np.asarray(d)         # device sync
             table.record_round(counts, np.asarray(p))
             occupied = np.asarray(state["occupied"])
@@ -852,9 +1122,18 @@ def serve(params, cfg: ModelConfig, prompts, rng, gcfg: GenServeConfig,
             keys = jnp.stack(
                 [rngs[i] if i < N else jax.random.fold_in(side_step, i)
                  for i in range(next_key, next_key + K)])
-            with obs_trace.span("gen.decode", steps=K):
-                state, counts = chunk_fn(params, state, keys)
-                counts = np.asarray(counts)    # device sync
+            with obs_trace.span("gen.decode", steps=K,
+                                spec_k=gcfg.spec_k):
+                if spec:
+                    state, (cnt, toks, props, accs) = chunk_fn(
+                        params, draft_params, state, keys)
+                    spec_tokens += int(np.asarray(toks).sum())
+                    spec_proposed += int(np.asarray(props).sum())
+                    spec_accepted += int(np.asarray(accs).sum())
+                    counts = np.asarray(cnt)   # device sync
+                else:
+                    state, counts = chunk_fn(params, state, keys)
+                    counts = np.asarray(counts)    # device sync
             next_key += K
             table.record_step(counts)
             occupied = np.asarray(state["occupied"])
@@ -904,10 +1183,22 @@ def serve(params, cfg: ModelConfig, prompts, rng, gcfg: GenServeConfig,
              "page_size": ps, "prefix_cache": sharing,
              "prefix_hit_rate": table.prefix_hit_rate(),
              "prefill_tokens_skipped": table.prefix_hit_tokens,
-             "prompt_tokens": table.prompt_tokens}
+             "prompt_tokens": table.prompt_tokens,
+             "spec_k": gcfg.spec_k,
+             "spec_proposed": spec_proposed,
+             "spec_accepted": spec_accepted,
+             "spec_tokens": spec_tokens,
+             "accept_rate": (spec_accepted / spec_proposed)
+                 if spec_proposed else 0.0}
     # registry metrics: one batch of updates per serve() call (the hot
     # round loop only touches the queue-depth gauge)
-    obs_metrics.counter("gen.tokens").inc(table.slot_steps)
+    obs_metrics.counter("gen.tokens").inc(
+        spec_tokens if spec else table.slot_steps)
+    if spec:
+        obs_metrics.counter("gen.spec_proposed").inc(spec_proposed)
+        obs_metrics.counter("gen.spec_accepted").inc(spec_accepted)
+        obs_metrics.histogram("gen.spec_accept_rate").observe(
+            stats["accept_rate"])
     obs_metrics.counter("gen.requests").inc(table.retired)
     obs_metrics.histogram("gen.wave_occupancy").observe(
         table.mean_occupancy())

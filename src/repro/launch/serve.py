@@ -72,6 +72,18 @@ def main():
     ap.add_argument("--expect-prefix-hits", action="store_true",
                     help="exit nonzero unless the prefix-cache token "
                          "hit rate is > 0 (CI smoke)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: draft tokens proposed "
+                         "per wave round, verified by one batched "
+                         "(k+1)-wide target step (0 = off)")
+    ap.add_argument("--draft-arch", default="",
+                    help="configs.archs entry for the speculative "
+                         "draft model (vocab/dtype follow --arch); "
+                         "required with --spec-k")
+    ap.add_argument("--check-spec-parity", action="store_true",
+                    help="greedy only: also run the non-speculative "
+                         "engine and exit nonzero unless the emitted "
+                         "tokens match exactly (CI smoke)")
     ap.add_argument("--trace", default=None, metavar="FILE",
                     help="write a Chrome-trace JSON of the serving run "
                          "(view in Perfetto / chrome://tracing)")
@@ -93,6 +105,14 @@ def main():
     mesh = make_host_mesh()
     key = jax.random.PRNGKey(0)
     params = T.init_params(key, cfg)
+    draft_params, draft_cfg = None, None
+    if args.spec_k > 0:
+        if not args.draft_arch:
+            raise SystemExit("--spec-k needs --draft-arch")
+        import dataclasses as _dc
+        draft_cfg = _dc.replace(archs.get(args.draft_arch, smoke=args.smoke),
+                                vocab_size=cfg.vocab_size, dtype=cfg.dtype)
+        draft_params = T.init_params(jax.random.PRNGKey(2), draft_cfg)
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size, jnp.int32)
     if args.shared_prompts > 0:
@@ -104,16 +124,22 @@ def main():
                             eos_token=args.eos_token,
                             greedy=args.temperature <= 0)
     with mesh:
-        gen = lambda **kw: genserve.generate(
+        gen = lambda spec=True, **kw: genserve.generate(
             params, cfg, prompts, jax.random.PRNGKey(1), sampler,
             wave=wave, fast_path=False, decode_chunk=args.decode_chunk,
             prefill_chunk=args.prefill_chunk, page_size=args.page_size,
-            prefix_cache=args.prefix_cache, **kw)
+            prefix_cache=args.prefix_cache,
+            spec_k=args.spec_k if spec else 0,
+            draft_params=draft_params if spec else None,
+            draft_cfg=draft_cfg if spec else None, **kw)
         gen()            # warm-up: compile the engine programs
         t0 = time.time()
         ro, stats = gen()   # timed run is uninstrumented (TTFT stamping
         jax.block_until_ready(ro["sequences"])   # syncs admission)
         dt = time.time() - t0
+        ro_ref = None
+        if args.check_spec_parity and args.spec_k > 0:
+            ro_ref, _ = gen(spec=False)
         obs_metrics.reset()   # quantiles below describe this run only
         _, ttft_stats = gen(measure_ttft=True)
     valid = float(jnp.sum(ro["mask"]))
@@ -150,6 +176,13 @@ def main():
         print(f"prefix cache: {hit:.1%} token hit rate "
               f"({stats['prefill_tokens_skipped']} of "
               f"{stats['prompt_tokens']} prompt tokens skipped)")
+    if args.spec_k > 0:
+        print(f"speculative: k={stats['spec_k']} "
+              f"draft={draft_cfg.name} "
+              f"accept rate {stats['accept_rate']:.1%} "
+              f"({stats['spec_accepted']}/{stats['spec_proposed']} drafts; "
+              f"{stats['spec_tokens']} tokens in {stats['decode_steps']} "
+              f"verify rounds)")
     if args.prefill_chunk:
         print(f"busy wave occupancy (decode + prefill): "
               f"{stats['busy_occupancy']:.2f} "
@@ -167,6 +200,15 @@ def main():
     if args.expect_prefix_hits and hit <= 0.0:
         raise SystemExit("expected a nonzero prefix-cache hit rate "
                          f"(got {hit}) — shared-prompt trace not hitting")
+    if ro_ref is not None:
+        import numpy as _np
+        same = _np.array_equal(
+            _np.asarray(ro["gen_tokens"]) * _np.asarray(ro["mask"]),
+            _np.asarray(ro_ref["gen_tokens"]) * _np.asarray(ro_ref["mask"]))
+        if not same:
+            raise SystemExit("speculative greedy decode diverged from the "
+                             "non-speculative engine (token parity check)")
+        print("spec parity: speculative == non-speculative (greedy)")
 
 
 if __name__ == "__main__":

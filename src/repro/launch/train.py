@@ -159,7 +159,8 @@ def run_rl(args) -> None:
 
     rl = RLConfig(algorithm=args.rl, n_rollouts=4,
                   max_new_tokens=task.max_answer_len, lr=args.lr,
-                  asynchronous=args.asynchronous)
+                  asynchronous=args.asynchronous,
+                  spec_k=args.spec_k, draft_arch=args.draft_arch)
     trainer = RLTrainer(cfg, rl, task, jax.random.PRNGKey(0), plan=r.plan,
                         topo=topo, wf=wf)
 
@@ -312,6 +313,13 @@ def main():
                     help="fit cost-model calibration from the measured "
                          "timeline and report the corrected measured-vs-"
                          "predicted ratio (with --rl)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="draft-model speculative decoding in GEN: "
+                         "draft tokens per wave round (0 = off; "
+                         "forces the genserve engine path)")
+    ap.add_argument("--draft-arch", default="",
+                    help="configs.archs entry for the speculative "
+                         "draft ('' = scaled-down copy of --arch)")
     ap.add_argument("--trace", default=None, metavar="FILE",
                     help="write a Chrome-trace JSON of the run "
                          "(view in Perfetto / chrome://tracing)")

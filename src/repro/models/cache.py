@@ -38,7 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.config import Mixer, ModelConfig
+from repro.models.config import FFN, Mixer, ModelConfig
 from repro.models import mamba as mamba_mod
 from repro.models import rwkv as rwkv_mod
 
@@ -262,6 +262,44 @@ def supports_prefix_sharing(cfg: ModelConfig, *, long_mode: bool = False) -> boo
     return all(
         spec.mixer == Mixer.ATTENTION
         and effective_window(cfg, spec, long_mode) is None
+        for spec in cfg.pattern)
+
+
+def supports_speculative_target(cfg: ModelConfig, *,
+                                long_mode: bool = False) -> bool:
+    """Whether `cfg` can serve as a speculative-decoding *target*.
+
+    The verify step commits only the accepted prefix of each candidate
+    chunk (a validity-masked ``write_kv``), so every layer's state must
+    be expressible as positional KV that can simply not-be-written:
+
+    * attention layers qualify — ring windows included, because the
+      verify step computes fresh chunk k/v without touching the cache
+      and the post-accept commit writes exactly ``accept_len`` entries;
+    * recurrent mixers (Mamba/RWKV) fold every token into O(1) state
+      that cannot be rolled back past a rejection;
+    * the rwkv_channel FFN's ``cm_shift`` is the same problem in the
+      channel-mix path."""
+    return all(
+        spec.mixer == Mixer.ATTENTION and spec.ffn != FFN.RWKV_CHANNEL
+        for spec in cfg.pattern)
+
+
+def supports_speculative_draft(cfg: ModelConfig, *,
+                               long_mode: bool = False) -> bool:
+    """Whether `cfg` can serve as a speculative-decoding *draft*.
+
+    The draft decodes autoregressively *before* acceptance is known, so
+    its cache takes writes that may later be rolled back by resetting
+    the position cursor.  That is only sound for full (non-ring)
+    attention caches: a stale entry at slot >= pos is masked invalid by
+    ``ring_slot_positions`` and overwritten before it is ever attended
+    to (``_layer_decode`` writes at pos first), whereas a ring write
+    wraps onto older in-window slots that a rollback cannot restore.
+    Recurrent state and cm_shift are unrecoverable for the same reason
+    as the target."""
+    return supports_speculative_target(cfg, long_mode=long_mode) and all(
+        effective_window(cfg, spec, long_mode) is None
         for spec in cfg.pattern)
 
 

@@ -35,6 +35,84 @@ def token_logprobs(logits, tokens):
     return jnp.take_along_axis(logp, tokens[..., None], axis=-1)[..., 0]
 
 
+def sample_with_logprobs(rng, logits, *, temperature: float = 1.0,
+                         greedy: bool = False):
+    """Sample tokens and score them in one call: (tokens, logprobs).
+
+    The single sampling point shared by the rollout decode loop, the
+    genserve wave decode / mixed-landing programs and the speculative
+    verify step — temperature/greedy semantics cannot drift between
+    them.  Logprobs are always the *untempered* model logprobs of the
+    chosen token (the RL objective scores under the model, not the
+    sampler)."""
+    tokens = sample_tokens(rng, logits, temperature=temperature,
+                           greedy=greedy)
+    return tokens, token_logprobs(logits, tokens)
+
+
+def speculative_accept(rng, target_logits, drafts, draft_logits, *,
+                       temperature: float = 1.0, greedy: bool = False):
+    """Batched draft-token acceptance for speculative decoding.
+
+    target_logits: [B, k+1, V] — one batched target step over the
+      candidate chunk [t0, d_1..d_k]; position j scores the token that
+      follows the prefix [t0, d_1..d_j], so row j is the target
+      distribution at the j-th speculated position.
+    drafts: [B, k] int32 — the draft proposals d_1..d_k.
+    draft_logits: [B, k, V] — the draft distributions the proposals were
+      sampled from (ignored on the greedy path; may be anything there).
+
+    Returns (accept_len [B] int32 in [0, k], cand [B, k+1] int32):
+      cand[:, j] == d_{j+1} for j < accept_len, and cand[:, accept_len]
+      is the bonus/corrected token t* — greedy: the target argmax at the
+      first mismatch (or after all k accepts); sampled: standard
+      rejection-resampling (accept d_j iff u_j < p_j(d_j)/q_j(d_j),
+      resample t* from the residual ``max(p - q, 0)`` on rejection, from
+      p itself when all k accepted) so the emitted-token distribution is
+      exactly the target's.  Positions past accept_len hold t*
+      (don't-care: the caller's validity mask cuts there)."""
+    B, k1, V = target_logits.shape
+    k = k1 - 1
+    tl = target_logits.astype(jnp.float32)
+    if greedy or temperature <= 0:
+        tgt = jnp.argmax(tl, axis=-1).astype(jnp.int32)        # [B, k+1]
+        match = drafts == tgt[:, :k]                           # [B, k]
+        accept = jnp.cumprod(match.astype(jnp.int32), axis=1)
+        a = jnp.sum(accept, axis=1).astype(jnp.int32)          # [B]
+        tstar = jnp.take_along_axis(tgt, a[:, None], axis=1)[:, 0]
+    else:
+        u_key, r_key = jax.random.split(rng)
+        p = jax.nn.softmax(tl / temperature, axis=-1)          # [B,k+1,V]
+        q = jax.nn.softmax(draft_logits.astype(jnp.float32) / temperature,
+                           axis=-1)                            # [B, k, V]
+        p_d = jnp.take_along_axis(p[:, :k], drafts[..., None],
+                                  axis=-1)[..., 0]             # [B, k]
+        q_d = jnp.take_along_axis(q, drafts[..., None], axis=-1)[..., 0]
+        u = jax.random.uniform(u_key, (B, k))
+        ok = u * jnp.maximum(q_d, 1e-30) < p_d
+        accept = jnp.cumprod(ok.astype(jnp.int32), axis=1)
+        a = jnp.sum(accept, axis=1).astype(jnp.int32)
+        # residual at the rejection point: max(p_a - q_a, 0); q padded
+        # with zeros at position k so the all-accepted bonus draw is
+        # from p_k itself
+        q_ext = jnp.concatenate([q, jnp.zeros((B, 1, V), q.dtype)], axis=1)
+        p_a = jnp.take_along_axis(p, a[:, None, None], axis=1)[:, 0]
+        q_a = jnp.take_along_axis(q_ext, a[:, None, None], axis=1)[:, 0]
+        resid = jnp.maximum(p_a - q_a, 0.0)
+        # degenerate residual (p <= q everywhere yet a rejection fired —
+        # numerically possible): fall back to the target distribution
+        resid = jnp.where(jnp.sum(resid, axis=-1, keepdims=True) > 0.0,
+                          resid, p_a)
+        tstar = jax.random.categorical(
+            r_key, jnp.log(jnp.maximum(resid, 1e-30)), axis=-1) \
+            .astype(jnp.int32)
+    drafts_ext = jnp.concatenate(
+        [drafts, jnp.zeros((B, 1), jnp.int32)], axis=1)        # [B, k+1]
+    cand = jnp.where(jnp.arange(k1)[None, :] < a[:, None],
+                     drafts_ext, tstar[:, None])
+    return a, cand
+
+
 def initial_alive(prompts, eos_token: Optional[int]):
     """[B] bool: alive at generation start.
 

@@ -317,6 +317,91 @@ def prefill_chunk_step(params, cfg: ModelConfig, tokens, cache, *,
 
 
 # ---------------------------------------------------------------------------
+# Speculative verify (one batched step over a candidate chunk, no commit)
+# ---------------------------------------------------------------------------
+
+def _layer_verify_chunk(p, cfg: ModelConfig, spec, x, cache_entry, pos, *,
+                        long_mode):
+    """x: [B,C,d] — the candidate chunk [t0, d_1..d_{C-1}] per slot.
+    Returns (x, {"k","v"} fresh chunk projections, *uncommitted*).
+
+    Identical attention pattern to `_layer_prefill_chunk` (pre-write
+    cache concat fresh chunk, causal-within-chunk, ragged-cache bias at
+    per-row cursors) but the cache is left untouched: the caller learns
+    the accept length from the returned logits and commits only the
+    accepted prefix via `cache.write_kv` with a short validity mask —
+    rejected speculative k/v never lands, so ring windows stay exact."""
+    if spec.mixer != Mixer.ATTENTION:
+        raise ValueError(
+            "speculative verify requires attention-only targets "
+            f"(got {spec.mixer}: recurrent state cannot roll back "
+            "rejected tokens)")
+    if spec.ffn == FFN.RWKV_CHANNEL:
+        raise ValueError("speculative verify cannot roll back the "
+                         "rwkv_channel cm_shift state")
+    B, C = x.shape[:2]
+    q_pos = jnp.asarray(pos, jnp.int32)[:, None] + jnp.arange(C)     # [B,C]
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    window = cache_mod.effective_window(cfg, spec, long_mode)
+    q, k, v = attn_mod.qkv_project(p["attn"], cfg, h, q_pos)
+    ck0, cv0 = cache_entry["k"], cache_entry["v"]
+    L = ck0.shape[1]
+    k_pos_c, valid_c = cache_mod.ring_slot_positions(L, window, pos - 1)
+    chunk_valid = jnp.ones((B, C), bool)
+    y = attn_mod.multihead_attention(
+        q, jnp.concatenate([ck0.astype(k.dtype), k], axis=1),
+        jnp.concatenate([cv0.astype(v.dtype), v], axis=1),
+        q_pos, jnp.concatenate([k_pos_c, q_pos], axis=1),
+        causal=True, window=window, cap=cfg.attn_softcap,
+        k_valid=jnp.concatenate([valid_c, chunk_valid], axis=1))
+    x = x + y.reshape(B, C, -1) @ p["attn"]["wo"]
+
+    h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+    if spec.moe:
+        y, _ = moe_mod.apply_moe(p["moe"], cfg, spec.ffn, h)
+    else:
+        y = apply_ffn(p["ffn"], cfg, spec.ffn, h)
+    return x + y, {"k": k, "v": v}
+
+
+def verify_chunk_step(params, cfg: ModelConfig, tokens, cache, *,
+                      long_mode: bool = False):
+    """One batched target step over a [B, C] candidate chunk
+    ([t0, d_1..d_{C-1}] at each row's ``cache["pos"]`` cursor).
+
+    Returns (logits [B, C, V], deltas): logits at *every* chunk
+    position (position j scores the token following the candidate
+    prefix up to j — the accept test and the bonus/corrected draw both
+    read from here), and ``deltas`` — the per-layer fresh-chunk
+    ``{"k","v"}`` projections, NOT written to the cache.  After the
+    caller computes the accept length it commits the accepted prefix
+    with ``cache.write_kv(ck, cv, deltas.k, deltas.v, pos, window,
+    valid=<short mask>)`` — the same variable-length chunk-write
+    machinery chunked prefill uses.  Requires an attention-only config
+    (see `cache.supports_speculative_target`)."""
+    assert not cfg.is_encoder_only, "encoder-only models have no decode path"
+    pos = jnp.asarray(cache["pos"], jnp.int32)
+    x = embed_tokens(params["embed"], cfg, tokens)
+    x = hint(x, "decode_residual")
+
+    def scan_body(x, inp):
+        bp, centry = inp
+        deltas = {}
+        for j, spec in enumerate(cfg.pattern):
+            x, d = _layer_verify_chunk(bp[f"layer{j}"], cfg, spec, x,
+                                       centry[f"layer{j}"], pos,
+                                       long_mode=long_mode)
+            deltas[f"layer{j}"] = d
+        return x, deltas
+
+    x, deltas = jax.lax.scan(scan_body, x,
+                             (params["blocks"], cache["blocks"]))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], cfg, x)
+    return logits, deltas
+
+
+# ---------------------------------------------------------------------------
 # Decode (single token, serve_step)
 # ---------------------------------------------------------------------------
 

@@ -24,6 +24,8 @@ import dataclasses
 import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core.costmodel import CostModel, TaskCost
 from repro.core.plan import Plan
 from repro.core.topology import Topology
@@ -85,9 +87,24 @@ class Calibration:
     n_samples: int
     local_tflops: float = 0.0
     local_hbm_gbps: float = 0.0
+    # per-coefficient fit (opt-in): device class -> separate scale
+    # factors for the compute, communication and HBM components of a
+    # task cost; absent classes fall back to the uniform class scale
+    class_coeff: Dict[str, Dict[str, float]] = dataclasses.field(
+        default_factory=dict)
 
     def scale_for(self, device_class: str) -> float:
         return self.class_scale.get(device_class, self.global_scale)
+
+    def coeff_for(self, device_class: str) -> Dict[str, float]:
+        """(comp, comm, hbm) scale factors for a class — the
+        per-coefficient fit when one exists, else the uniform class
+        scale applied to all three."""
+        c = self.class_coeff.get(device_class)
+        if c:
+            return c
+        s = self.scale_for(device_class)
+        return {"comp": s, "comm": s, "hbm": s}
 
     def cost_model(self, topo: Topology, wf: RLWorkflow
                    ) -> "CalibratedCostModel":
@@ -99,6 +116,9 @@ class Calibration:
     def publish_metrics(self) -> None:
         for cls, s in self.class_scale.items():
             metrics.gauge(f"calib.scale.{cls}").set(s)
+        for cls, c in self.class_coeff.items():
+            for name, s in c.items():
+                metrics.gauge(f"calib.coeff.{cls}.{name}").set(s)
         metrics.gauge("calib.global_scale").set(self.global_scale)
         metrics.gauge("calib.sync_scale").set(self.sync_scale)
         if self.local_tflops:
@@ -118,7 +138,8 @@ def device_class_of(topo: Topology, plan: Plan, t: int) -> str:
 def fit_calibration(topo: Topology, wf: RLWorkflow, plan: Plan,
                     timeline: Sequence, *, skip_iterations: int = 1,
                     sync_s: Optional[Sequence[float]] = None,
-                    measure_local: bool = False) -> Calibration:
+                    measure_local: bool = False,
+                    per_coefficient: bool = False) -> Calibration:
     """Fit per-device-class scales from a measured timeline.
 
     ``skip_iterations`` drops the first iterations (jit compilation
@@ -127,10 +148,18 @@ def fit_calibration(topo: Topology, wf: RLWorkflow, plan: Plan,
     ``measure_local=True`` additionally microbenches the local device
     (matmul TFLOP/s + HBM GB/s via ``core.profiler``) and records the
     numbers on the result — the ground truth a physical deployment
-    would feed per-class into ``GPUSpec`` directly."""
+    would feed per-class into ``GPUSpec`` directly.
+
+    ``per_coefficient=True`` additionally fits *separate* comp / comm /
+    HBM scale factors per class (nonnegative least squares of measured
+    totals against the predicted component split) — one uniform scale
+    cannot capture a class whose links degraded but whose FLOPs didn't.
+    Classes whose observations are degenerate (all from one component
+    mix, or a component never exercised) keep the uniform scale for
+    the unidentifiable coefficients."""
     cm = CostModel(topo, wf)
-    predicted = {t: cm.task_cost(plan, t).total
-                 for t in range(wf.n_tasks)}
+    pred_tc = {t: cm.task_cost(plan, t) for t in range(wf.n_tasks)}
+    predicted = {t: tc.total for t, tc in pred_tc.items()}
     measured = measured_task_durations(timeline)
     by_class: Dict[str, List[float]] = {}
     all_ratios: List[float] = []
@@ -146,6 +175,33 @@ def fit_calibration(topo: Topology, wf: RLWorkflow, plan: Plan,
         all_ratios.append(ratio)
     class_scale = {cls: _geomean(rs) for cls, rs in by_class.items()}
     global_scale = _geomean(all_ratios)
+
+    class_coeff: Dict[str, Dict[str, float]] = {}
+    if per_coefficient:
+        rows: Dict[str, List[Tuple[List[float], float]]] = {}
+        for (it, t), dur in measured.items():
+            if it < skip_iterations or t not in pred_tc or dur <= 0:
+                continue
+            tc = pred_tc[t]
+            row = [tc.comp + tc.bubble, tc.tp + tc.pp + tc.dp, tc.hbm]
+            if sum(row) <= 0:
+                continue
+            rows.setdefault(device_class_of(topo, plan, t),
+                            []).append((row, dur))
+        for cls, obs in rows.items():
+            A = np.array([r for r, _ in obs], dtype=float)
+            y = np.array([d for _, d in obs], dtype=float)
+            coeff, *_ = np.linalg.lstsq(A, y, rcond=None)
+            coeff = np.maximum(coeff, 0.0)
+            if float(coeff.sum()) <= 0.0:
+                continue        # degenerate: keep the uniform scale
+            # a component the class never exercises (zero column)
+            # carries no signal — pin it to the uniform scale
+            uni = class_scale.get(cls, global_scale)
+            coeff = np.where(A.sum(axis=0) <= 0.0, uni, coeff)
+            class_coeff[cls] = {"comp": float(coeff[0]),
+                                "comm": float(coeff[1]),
+                                "hbm": float(coeff[2])}
 
     sync_scale = global_scale
     if sync_s:
@@ -165,13 +221,15 @@ def fit_calibration(topo: Topology, wf: RLWorkflow, plan: Plan,
     cal = Calibration(class_scale, global_scale, sync_scale,
                       n_samples=len(all_ratios),
                       local_tflops=local_tflops,
-                      local_hbm_gbps=local_hbm)
+                      local_hbm_gbps=local_hbm,
+                      class_coeff=class_coeff)
     cal.publish_metrics()
     return cal
 
 
 def fit_from_engine(engine, *, skip_iterations: int = 1,
-                    measure_local: bool = False) -> Calibration:
+                    measure_local: bool = False,
+                    per_coefficient: bool = False) -> Calibration:
     """Fit from a live engine's replayed timeline (current epoch's plan
     and topology; the engine records wall-clock sync durations)."""
     if engine.topo is None:
@@ -179,7 +237,8 @@ def fit_from_engine(engine, *, skip_iterations: int = 1,
     return fit_calibration(engine.topo, engine.wf, engine.plan,
                            engine.timeline, skip_iterations=skip_iterations,
                            sync_s=getattr(engine, "sync_durations", None),
-                           measure_local=measure_local)
+                           measure_local=measure_local,
+                           per_coefficient=per_coefficient)
 
 
 def _actor_train_task(wf: RLWorkflow) -> int:
@@ -204,7 +263,17 @@ class CalibratedCostModel(CostModel):
 
     def task_cost(self, plan: Plan, t: int) -> TaskCost:
         tc = super().task_cost(plan, t)
-        s = self.calibration.scale_for(device_class_of(self.topo, plan, t))
+        cls = device_class_of(self.topo, plan, t)
+        if cls in self.calibration.class_coeff:
+            c = self.calibration.class_coeff[cls]
+            out = TaskCost(total=0.0, comp=tc.comp * c["comp"],
+                           tp=tc.tp * c["comm"], pp=tc.pp * c["comm"],
+                           dp=tc.dp * c["comm"], hbm=tc.hbm * c["hbm"],
+                           bubble=tc.bubble * c["comp"])
+            out.total = (out.comp + out.tp + out.pp + out.dp
+                         + out.hbm + out.bubble)
+            return out
+        s = self.calibration.scale_for(cls)
         return TaskCost(total=tc.total * s, comp=tc.comp * s,
                         tp=tc.tp * s, pp=tc.pp * s, dp=tc.dp * s,
                         hbm=tc.hbm * s, bubble=tc.bubble * s)

@@ -34,8 +34,8 @@ class SamplerConfig:
 
 
 def _sample(rng, logits, cfg: SamplerConfig):
-    return sampling.sample_tokens(rng, logits, temperature=cfg.temperature,
-                                  greedy=cfg.greedy)
+    return sampling.sample_with_logprobs(
+        rng, logits, temperature=cfg.temperature, greedy=cfg.greedy)
 
 
 def generate(params, cfg: ModelConfig, prompts, rng,
@@ -50,14 +50,12 @@ def generate(params, cfg: ModelConfig, prompts, rng,
     logits0 = out["logits"][:, -1]
 
     rngs = jax.random.split(rng, N)
-    tok0 = _sample(rngs[0], logits0, sampler)
-    lp0 = sampling.token_logprobs(logits0, tok0)
+    tok0, lp0 = _sample(rngs[0], logits0, sampler)
 
     def step(carry, rng_t):
         cache, tok, alive = carry
         logits, cache = T.decode_step(params, cfg, tok[:, None], cache)
-        nxt = _sample(rng_t, logits, sampler)
-        lp = sampling.token_logprobs(logits, nxt)
+        nxt, lp = _sample(rng_t, logits, sampler)
         alive_next = sampling.next_alive(alive, tok, sampler.eos_token)
         return (cache, nxt, alive_next), (nxt, lp, alive_next)
 

@@ -301,6 +301,79 @@ def test_skip_iterations_drops_warmup():
     assert cal.global_scale == pytest.approx(10.0, rel=1e-6)
 
 
+def _component_timeline(cm, plan, wf, s, n_iters, tasks=None):
+    """Durations with *different* scales per cost component — what a
+    class with degraded links but healthy FLOPs produces."""
+    events, t = [], 0.0
+    for it in range(n_iters):
+        for task in (tasks if tasks is not None else range(wf.n_tasks)):
+            tc = cm.task_cost(plan, task)
+            dur = (s["comp"] * (tc.comp + tc.bubble)
+                   + s["comm"] * (tc.tp + tc.pp + tc.dp)
+                   + s["hbm"] * tc.hbm)
+            events.append(Event(t, "start", it, task))
+            events.append(Event(t + dur, "end", it, task))
+            t += dur
+    return events
+
+
+def test_per_coefficient_fit_recovers_component_scales():
+    """A uniform scale cannot express comm 40x / hbm 7x / comp 3x; the
+    per-coefficient fit separates them from the task mix (GEN carries
+    the hbm term, TRAIN the dp term, INF neither)."""
+    topo, wf, plan = _tiny_setup()
+    cm = CostModel(topo, wf)
+    s = {"comp": 3.0, "comm": 40.0, "hbm": 7.0}
+    timeline = _component_timeline(cm, plan, wf, s, n_iters=3)
+    cal = obs_cal.fit_calibration(topo, wf, plan, timeline,
+                                  skip_iterations=1, per_coefficient=True)
+    coeff = cal.coeff_for("A100")
+    assert coeff["comm"] == pytest.approx(s["comm"], rel=1e-3)
+    assert coeff["hbm"] == pytest.approx(s["hbm"], rel=1e-2)
+    assert coeff["comp"] == pytest.approx(s["comp"], rel=1e-2)
+    # never-measured classes fall back to the uniform scale triple
+    fb = cal.coeff_for("no-such-class")
+    assert fb["comp"] == fb["comm"] == fb["hbm"] == cal.global_scale
+    # the fit published per-coefficient gauges
+    snap = obs_metrics.snapshot()
+    assert snap["calib.coeff.A100.comm"] == pytest.approx(coeff["comm"])
+
+
+def test_per_coefficient_calibrated_model_matches_measured():
+    """CalibratedCostModel with a per-coefficient fit reproduces the
+    measured per-task durations, not just their geometric mean."""
+    topo, wf, plan = _tiny_setup()
+    cm = CostModel(topo, wf)
+    s = {"comp": 2.0, "comm": 50.0, "hbm": 7.0}
+    timeline = _component_timeline(cm, plan, wf, s, n_iters=3)
+    cal = obs_cal.fit_calibration(topo, wf, plan, timeline,
+                                  skip_iterations=1, per_coefficient=True)
+    ccm = cal.cost_model(topo, wf)
+    for t in range(wf.n_tasks):
+        tc = cm.task_cost(plan, t)
+        dur = (s["comp"] * (tc.comp + tc.bubble)
+               + s["comm"] * (tc.tp + tc.pp + tc.dp)
+               + s["hbm"] * tc.hbm)
+        assert ccm.task_cost(plan, t).total == pytest.approx(dur, rel=1e-3)
+
+
+def test_per_coefficient_unexercised_component_pinned():
+    """Dropping the GEN task from the timeline leaves the hbm column
+    all-zero — no signal, so the hbm coefficient is pinned to the
+    uniform class scale while comm is still identified."""
+    topo, wf, plan = _tiny_setup()
+    cm = CostModel(topo, wf)
+    s = {"comp": 3.0, "comm": 40.0, "hbm": 7.0}
+    tasks = [t for t in range(wf.n_tasks)
+             if cm.task_cost(plan, t).hbm == 0.0]
+    timeline = _component_timeline(cm, plan, wf, s, n_iters=3, tasks=tasks)
+    cal = obs_cal.fit_calibration(topo, wf, plan, timeline,
+                                  skip_iterations=1, per_coefficient=True)
+    coeff = cal.coeff_for("A100")
+    assert coeff["comm"] == pytest.approx(s["comm"], rel=1e-3)
+    assert coeff["hbm"] == pytest.approx(cal.scale_for("A100"))
+
+
 def test_divergence_monitor_fires_on_sustained_drift():
     mon = obs_cal.DivergenceMonitor(threshold=3.0, sustain=3, alpha=1.0)
     # stable: ratios hover around 1 -> no fire

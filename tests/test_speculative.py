@@ -1,0 +1,490 @@
+"""Speculative decoding: draft-k propose, one batched verify.
+
+- greedy spec is token-exact vs the non-speculative engine across the
+  admission matrix (ring windows, GQA, paged, prefix sharing, recycled
+  slots, ragged prompts, per-request budgets, EOS retirement) — greedy
+  acceptance is RNG-free, so the parity is exact, not statistical;
+- sampled spec preserves the target distribution (rejection-resampling
+  unit test with a measured total-variation bound) and keeps the
+  rollout-contract invariants (monotone masks, finite logprobs);
+- a draft that agrees with the target (zeroed second layer) accepts
+  every proposal and finishes in fewer verify rounds than plain wave
+  decode takes steps;
+- ``verify_chunk_step`` over a [B, C] candidate chunk scores exactly
+  what C sequential ``decode_step`` calls score;
+- satellite: ``cache.write_kv`` / ``cache.paged_update_chunk`` with
+  *short* validity masks — accept < k mid-ring-wrap, accept 0, clamped
+  full-cache tails;
+- cost model: ``gen_speculative_wave`` pricing (k = 0 degenerates to
+  the HBM decode bound, accept-rate monotonicity, task_cost switch)
+  and the EA's deterministic best-response draft-k choice in decode().
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import enumerate as enum_mod
+from repro.core import topology, workflow
+from repro.core.costmodel import (CostModel, default_draft_spec,
+                                  speculative_expected_tokens)
+from repro.core.ea import EvolutionarySearch
+from repro.core.workflow import TaskKind
+from repro.data.synthetic import EOS, VOCAB_SIZE
+from repro.genserve.decoder import GenServeConfig, serve
+from repro.models import cache as cache_mod
+from repro.models import sampling
+from repro.models import transformer as T
+from repro.models.config import LayerSpec, Mixer, ModelConfig
+
+KEY = jax.random.PRNGKey(0)
+P, N = 8, 6
+
+
+def spec_cfg(window=None, kv=2, n_heads=2, softcap=None, n_layers=2):
+    return ModelConfig(name=f"sp-w{window}-kv{kv}-h{n_heads}-sc{softcap}",
+                       n_layers=n_layers, d_model=64, n_heads=n_heads,
+                       n_kv_heads=kv, head_dim=32, d_ff=128,
+                       vocab_size=VOCAB_SIZE, dtype="float32",
+                       attn_softcap=softcap,
+                       pattern=(LayerSpec(window=window),))
+
+
+def draft_for(cfg, key=5):
+    """A 1-layer full-attention draft sharing the target's vocab."""
+    dcfg = dataclasses.replace(cfg, name=f"{cfg.name}-draft", n_layers=1,
+                               pattern=(LayerSpec(window=None),))
+    return dcfg, T.init_params(jax.random.PRNGKey(key), dcfg)
+
+
+def prompts_for(n, key=3, cfg=None):
+    return jax.random.randint(jax.random.PRNGKey(key), (n, P), 0,
+                              (cfg or spec_cfg()).vocab_size, jnp.int32)
+
+
+def assert_rollout_equal(ref, got, atol=1e-4):
+    mr, mg = np.asarray(ref["mask"]), np.asarray(got["mask"])
+    np.testing.assert_array_equal(mr, mg)
+    np.testing.assert_array_equal(
+        np.asarray(ref["gen_tokens"]) * mr.astype(np.int32),
+        np.asarray(got["gen_tokens"]) * mg.astype(np.int32))
+    np.testing.assert_allclose(np.asarray(ref["logprobs"]) * mr,
+                               np.asarray(got["logprobs"]) * mg,
+                               rtol=1e-4, atol=atol)
+    np.testing.assert_array_equal(np.asarray(ref["sequences"])[:, :P],
+                                  np.asarray(got["sequences"])[:, :P])
+
+
+def run_pair(cfg, gcfg_kw, spec_k, *, n_reqs=8, pkey=11, gen_lens=None,
+             prompt_lens=None, prompts=None):
+    """(non-spec rollout+stats, spec rollout+stats) on the same inputs."""
+    params = T.init_params(KEY, cfg)
+    dcfg, dparams = draft_for(cfg)
+    if prompts is None:
+        prompts = prompts_for(n_reqs, key=pkey, cfg=cfg)
+    ref = serve(params, cfg, prompts, jax.random.PRNGKey(7),
+                GenServeConfig(**gcfg_kw), gen_lens=gen_lens,
+                prompt_lens=prompt_lens)
+    got = serve(params, cfg, prompts, jax.random.PRNGKey(7),
+                GenServeConfig(**gcfg_kw, spec_k=spec_k),
+                gen_lens=gen_lens, prompt_lens=prompt_lens,
+                draft_params=dparams, draft_cfg=dcfg)
+    return ref, got
+
+
+# ---------------------------------------------------------------------------
+# Greedy parity: speculative == non-speculative, token for token
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("window,kv,ps,k,C", [
+    (None, 2, 0, 2, 0),   # one-shot admission, full attention
+    (None, 2, 0, 4, 3),   # chunked ragged admission
+    (6, 2, 0, 3, 3),      # ring-window target (wraps mid-run)
+    (None, 1, 4, 2, 3),   # paged + GQA
+    (6, 1, 4, 4, 3),      # ring + GQA + paged
+])
+def test_spec_greedy_parity_matrix(window, kv, ps, k, C):
+    """Greedy speculative decode is exact vs the plain engine under
+    recycled slots (B > W), per-request budgets, EOS retirement and —
+    when chunked — ragged prompt lengths."""
+    cfg = spec_cfg(window, kv)
+    lens = [N, 1, N, 2, 1, N, 2, N]
+    plens = [8, 5, 3, 8, 4, 8, 6, 3] if C else None
+    kw = dict(wave=3, max_new_tokens=N, eos_token=EOS, temperature=0.0,
+              greedy=True, prefill_chunk=C, page_size=ps)
+    (ref, _), (got, stats) = run_pair(cfg, kw, k, gen_lens=lens,
+                                      prompt_lens=plens)
+    assert_rollout_equal(ref, got)
+    assert stats["spec_k"] == k
+    assert 0 <= stats["spec_accepted"] <= stats["spec_proposed"]
+    assert 0.0 <= stats["accept_rate"] <= 1.0
+
+
+def test_spec_greedy_parity_gqa_softcap():
+    """Logit softcapping and 4:2 grouped-query heads ride through the
+    verify step unchanged."""
+    cfg = spec_cfg(None, kv=2, n_heads=4, softcap=30.0)
+    kw = dict(wave=3, max_new_tokens=N, eos_token=EOS, temperature=0.0,
+              greedy=True)
+    (ref, _), (got, _) = run_pair(cfg, kw, 3)
+    assert_rollout_equal(ref, got)
+
+
+def test_spec_greedy_parity_prefix_sharing():
+    """Radix prefix reuse composes with speculation: shared prompt
+    prefixes still skip their prefill and the decode stays exact."""
+    cfg = spec_cfg()
+    prompts = np.array(prompts_for(6, key=13, cfg=cfg))
+    prompts[:, :6] = prompts[0, :6]         # shared system prompt
+    prompts = jnp.asarray(prompts)
+    kw = dict(wave=3, max_new_tokens=N, eos_token=EOS, temperature=0.0,
+              greedy=True, prefill_chunk=4, page_size=4,
+              prefix_cache=True)
+    (ref, rstats), (got, gstats) = run_pair(cfg, kw, 2, prompts=prompts)
+    assert_rollout_equal(ref, got)
+    assert rstats["prefix_hit_rate"] > 0.0
+    assert gstats["prefix_hit_rate"] == rstats["prefix_hit_rate"]
+
+
+def test_spec_high_accept_draft_accepts_everything():
+    """A target whose second layer is zeroed (residual identity) agrees
+    with the 1-layer draft built from its own first layer — acceptance
+    is total and the wave finishes in fewer rounds than plain decode
+    takes steps."""
+    cfg = spec_cfg(n_layers=2)
+    params = T.init_params(KEY, cfg)
+    params = dict(params, blocks=jax.tree_util.tree_map(
+        lambda x: x.at[1].set(0.0) if x.shape[0] == 2 else x,
+        params["blocks"]))
+    dcfg = dataclasses.replace(cfg, name=f"{cfg.name}-self", n_layers=1)
+    dparams = {"embed": params["embed"], "final_norm": params["final_norm"],
+               "blocks": jax.tree_util.tree_map(lambda x: x[:1],
+                                                params["blocks"])}
+    prompts = prompts_for(4, key=9, cfg=cfg)
+    NN = 8
+    kw = dict(wave=4, max_new_tokens=NN, temperature=0.0, greedy=True)
+    ref, rstats = serve(params, cfg, prompts, jax.random.PRNGKey(7),
+                        GenServeConfig(**kw))
+    got, stats = serve(params, cfg, prompts, jax.random.PRNGKey(7),
+                       GenServeConfig(**kw, spec_k=4),
+                       draft_params=dparams, draft_cfg=dcfg)
+    assert_rollout_equal(ref, got)
+    # near-total acceptance: the two paths run different matmul shapes
+    # ([W, 1] draft step vs [W, k+1] verify chunk), so float rounding
+    # may flip an occasional argmax near-tie — but never below 90%
+    assert stats["accept_rate"] >= 0.9
+    assert stats["decode_steps"] < rstats["decode_steps"]
+    # ~5 tokens land per verify round instead of 1 per decode step
+    assert stats["decode_steps"] <= NN // 2
+
+
+# ---------------------------------------------------------------------------
+# Sampled mode: contract invariants + distribution preservation
+# ---------------------------------------------------------------------------
+
+def test_spec_sampled_mode_contract():
+    """Sampled speculation keeps the rollout contract: monotone masks,
+    the first EOS valid, finite logprobs on valid positions, prompt
+    prefixes untouched."""
+    cfg = spec_cfg()
+    params = T.init_params(KEY, cfg)
+    dcfg, dparams = draft_for(cfg)
+    prompts = prompts_for(6, key=17, cfg=cfg)
+    ro, stats = serve(params, cfg, prompts, jax.random.PRNGKey(7),
+                      GenServeConfig(wave=3, max_new_tokens=N,
+                                     eos_token=EOS, temperature=1.0,
+                                     greedy=False, spec_k=4),
+                      draft_params=dparams, draft_cfg=dcfg)
+    mask = np.asarray(ro["mask"])
+    assert np.all(np.diff(mask, axis=1) <= 0), "mask must be monotone"
+    lp = np.asarray(ro["logprobs"])
+    assert np.all(np.isfinite(lp[mask.astype(bool)]))
+    np.testing.assert_array_equal(np.asarray(ro["sequences"])[:, :P],
+                                  np.asarray(prompts))
+    gen = np.asarray(ro["gen_tokens"])
+    eos_rows = mask.astype(bool) & (gen == EOS)
+    # an emitted EOS is the row's last valid token
+    for b, t in zip(*np.nonzero(eos_rows)):
+        assert mask[b, t + 1:].sum() == 0
+    assert stats["spec_proposed"] > 0
+    assert 0 <= stats["spec_accepted"] <= stats["spec_proposed"]
+    assert 0.0 <= stats["accept_rate"] <= 1.0
+
+
+def test_speculative_accept_greedy_unit():
+    """Hand-built logits: longest-prefix match, bonus = target argmax
+    at the first mismatch (or position k after a clean sweep)."""
+    B, k, V = 3, 3, 6
+    tgt = np.array([[1, 2, 3, 4],      # drafts match 2, then diverge
+                    [0, 0, 0, 0],      # immediate mismatch
+                    [5, 1, 2, 3]])     # full accept -> bonus from row k
+    logits = np.full((B, k + 1, V), -10.0, np.float32)
+    for b in range(B):
+        for j in range(k + 1):
+            logits[b, j, tgt[b, j]] = 10.0
+    drafts = jnp.asarray([[1, 2, 0], [1, 0, 0], [5, 1, 2]], jnp.int32)
+    a, cand = sampling.speculative_accept(
+        jax.random.PRNGKey(0), jnp.asarray(logits), drafts,
+        jnp.zeros((B, k, V), jnp.float32), temperature=0.0, greedy=True)
+    np.testing.assert_array_equal(np.asarray(a), [2, 0, 3])
+    cand = np.asarray(cand)
+    np.testing.assert_array_equal(cand[0, :3], [1, 2, 3])
+    assert cand[1, 0] == 0
+    np.testing.assert_array_equal(cand[2], [5, 1, 2, 3])
+
+
+def test_speculative_accept_sampled_preserves_target():
+    """Rejection-resampling emits the *target* distribution at the first
+    speculated position even though proposals come from a very
+    different draft: total variation to softmax(p) stays small."""
+    B, V = 20000, 4
+    p_logits = jnp.asarray([0.5, -0.5, 1.5, 0.0], jnp.float32)
+    q_logits = jnp.asarray([2.0, 0.0, -2.0, 1.0], jnp.float32)
+    tl = jnp.broadcast_to(p_logits, (B, 2, V))
+    ql = jnp.broadcast_to(q_logits, (B, 1, V))
+    k_d, k_a = jax.random.split(jax.random.PRNGKey(42))
+    drafts = jax.random.categorical(k_d, ql, axis=-1).astype(jnp.int32)
+    a, cand = sampling.speculative_accept(k_a, tl, drafts, ql,
+                                          temperature=1.0, greedy=False)
+    emitted = np.asarray(cand)[:, 0]    # accepted draft or corrected t*
+    emp = np.bincount(emitted, minlength=V) / B
+    target = np.asarray(jax.nn.softmax(p_logits))
+    assert 0.5 * np.abs(emp - target).sum() < 0.03
+    assert np.asarray(a).min() >= 0 and np.asarray(a).max() <= 1
+
+
+# ---------------------------------------------------------------------------
+# verify_chunk_step == C sequential decode steps
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("window", [None, 4])
+def test_verify_chunk_step_matches_sequential(window):
+    cfg = spec_cfg(window)
+    params = T.init_params(KEY, cfg)
+    B, C = 3, 4
+    prompts = prompts_for(B, key=21, cfg=cfg)
+    out = T.forward(params, cfg, {"tokens": prompts}, return_cache=True,
+                    max_cache_len=P + C, remat=False)
+    chunk = jax.random.randint(jax.random.PRNGKey(23), (B, C), 0,
+                               cfg.vocab_size, jnp.int32)
+    base = out["cache"]
+    pos0 = jnp.full((B,), P, jnp.int32)
+    vlogits, deltas = T.verify_chunk_step(
+        params, cfg, chunk, {"blocks": base["blocks"], "pos": pos0})
+    cache = {"blocks": base["blocks"], "pos": pos0}
+    seq_logits = []
+    for c in range(C):
+        lg, cache = T.decode_step(params, cfg, chunk[:, c:c + 1], cache)
+        seq_logits.append(lg)
+    np.testing.assert_allclose(np.asarray(vlogits),
+                               np.stack([np.asarray(l) for l in seq_logits],
+                                        axis=1), rtol=1e-4, atol=1e-4)
+    # verify computes fresh chunk k/v but never writes the cache
+    for name, d in deltas.items():
+        assert set(d) == {"k", "v"} and d["k"].shape[2] == C
+
+
+# ---------------------------------------------------------------------------
+# Gating: what can(not) speculate, and why
+# ---------------------------------------------------------------------------
+
+def test_spec_support_predicates():
+    full = spec_cfg(None)
+    ring = spec_cfg(6)
+    mamba = dataclasses.replace(full, pattern=(LayerSpec(mixer=Mixer.MAMBA),))
+    assert cache_mod.supports_speculative_target(full)
+    assert cache_mod.supports_speculative_target(ring)   # fresh-chunk verify
+    assert cache_mod.supports_speculative_draft(full)
+    assert not cache_mod.supports_speculative_draft(ring)  # no ring rollback
+    assert not cache_mod.supports_speculative_target(mamba)
+
+
+def test_spec_gating_errors():
+    cfg = spec_cfg()
+    params = T.init_params(KEY, cfg)
+    prompts = prompts_for(2, cfg=cfg)
+    gcfg = GenServeConfig(wave=2, max_new_tokens=2, temperature=0.0,
+                          greedy=True, spec_k=2)
+    ring_draft = dataclasses.replace(cfg, name="rd",
+                                     pattern=(LayerSpec(window=4),))
+    with pytest.raises(AssertionError, match="full-window"):
+        serve(params, cfg, prompts, KEY, gcfg,
+              draft_params=T.init_params(KEY, ring_draft),
+              draft_cfg=ring_draft)
+    bad_vocab = dataclasses.replace(cfg, name="bv",
+                                    vocab_size=cfg.vocab_size + 1)
+    with pytest.raises(AssertionError, match="vocabulary"):
+        serve(params, cfg, prompts, KEY, gcfg,
+              draft_params=T.init_params(KEY, bad_vocab),
+              draft_cfg=bad_vocab)
+    with pytest.raises(AssertionError, match="draft_params"):
+        serve(params, cfg, prompts, KEY, gcfg)
+    with pytest.raises(AssertionError, match="batched"):
+        GenServeConfig(wave=2, max_new_tokens=2, spec_k=2,
+                       decode_path="vmapped").validate()
+
+
+# ---------------------------------------------------------------------------
+# Satellite: short-validity chunk writes (the machinery accepts ride on)
+# ---------------------------------------------------------------------------
+
+def _ref_write(cache, new, pos, window, valid):
+    """Token-by-token reference for write_kv's scatter semantics."""
+    B, C = new.shape[:2]
+    L = cache.shape[1]
+    ref = np.array(cache)
+    for b in range(B):
+        wrote_end = False
+        for c in range(C):
+            if not valid[b, c]:
+                continue
+            p = pos[b] + c
+            if window is not None:
+                ref[b, p % L] = new[b, c]
+            elif p < L - 1:
+                ref[b, p] = new[b, c]
+            elif not wrote_end:
+                ref[b, L - 1] = new[b, c]   # keep-first clamp
+                wrote_end = True
+    return ref
+
+
+@pytest.mark.parametrize("window,pos,n_valid", [
+    (4, [2, 3, 0], [3, 5, 0]),     # accept < k wrapping the ring mid-chunk
+    (4, [0, 1, 2], [0, 0, 0]),     # accept 0 everywhere: cache untouched
+    (None, [3, 6, 0], [4, 3, 2]),  # full cache, clamped tail keep-first
+])
+def test_write_kv_short_validity(window, pos, n_valid):
+    B, C, L, KV, hd = 3, 5, 8 if window is None else window, 2, 4
+    rng = np.random.default_rng(0)
+    cache = rng.standard_normal((B, L, KV, hd)).astype(np.float32)
+    k_new = rng.standard_normal((B, C, KV, hd)).astype(np.float32)
+    v_new = rng.standard_normal((B, C, KV, hd)).astype(np.float32)
+    valid = np.arange(C)[None, :] < np.asarray(n_valid)[:, None]
+    ck, cv = cache_mod.write_kv(jnp.asarray(cache), jnp.asarray(cache),
+                                jnp.asarray(k_new), jnp.asarray(v_new),
+                                jnp.asarray(pos, jnp.int32), window,
+                                valid=jnp.asarray(valid))
+    np.testing.assert_allclose(np.asarray(ck),
+                               _ref_write(cache, k_new, pos, window, valid))
+    np.testing.assert_allclose(np.asarray(cv),
+                               _ref_write(cache, v_new, pos, window, valid))
+    if not valid.any():
+        np.testing.assert_array_equal(np.asarray(ck), cache)
+
+
+def test_paged_update_chunk_short_validity():
+    """Direct unit: live chunk tokens land at btab[slot//ps] pages, a
+    zero-valid row leaves its pool pages untouched."""
+    cfg = ModelConfig(name="pgu", n_layers=1, d_model=16, n_heads=2,
+                      n_kv_heads=2, head_dim=8, d_ff=32,
+                      vocab_size=VOCAB_SIZE, dtype="float32",
+                      pattern=(LayerSpec(window=None),))
+    B, C, ps, max_seq = 3, 4, 2, 8
+    spec = cfg.pattern[0]
+    L = cache_mod.kv_cache_len(cfg, spec, max_seq, False)
+    n_pool, KV, hd = B * (L // ps), 2, 8
+    rng = np.random.default_rng(1)
+    pool = np.zeros((1, n_pool, ps, KV, hd), np.float32)
+    view = rng.standard_normal((1, B, L, KV, hd)).astype(np.float32)
+    btab = np.arange(B * (L // ps), dtype=np.int32).reshape(B, L // ps)
+    pcur, n_valid = [0, 3, 5], [4, 2, 0]
+    out = cache_mod.paged_update_chunk(
+        cfg, {"layer0": {"k": jnp.asarray(pool), "v": jnp.asarray(pool)}},
+        {"layer0": {"k": jnp.asarray(view), "v": jnp.asarray(view)}},
+        jnp.asarray(btab), jnp.asarray(pcur, jnp.int32),
+        jnp.asarray(n_valid, jnp.int32), C, max_seq, page_size=ps)
+    ref = pool.copy()
+    for b in range(B):
+        for c in range(n_valid[b]):
+            slot = min(pcur[b] + c, L - 1)
+            ref[0, btab[b, slot // ps], slot % ps] = view[0, b, slot]
+    np.testing.assert_allclose(np.asarray(out["layer0"]["k"]), ref)
+    np.testing.assert_allclose(np.asarray(out["layer0"]["v"]), ref)
+    # the zero-valid row's pages are bitwise untouched
+    np.testing.assert_array_equal(np.asarray(out["layer0"]["k"])[0, btab[2]],
+                                  pool[0, btab[2]])
+
+
+# ---------------------------------------------------------------------------
+# Cost model + scheduler choice
+# ---------------------------------------------------------------------------
+
+def _sched_setup():
+    cfg = ModelConfig(name="spec-cm-t", n_layers=1, d_model=32, n_heads=2,
+                      n_kv_heads=2, d_ff=64, vocab_size=VOCAB_SIZE,
+                      dtype="float32")
+    spec = workflow.LLMSpec.from_model_config(cfg)
+    wf = workflow.make_workflow("grpo", spec, synchronous=True,
+                                n_rollouts=2, seq_in=8, seq_out=4,
+                                global_batch=1)
+    topo = topology.build_testbed("single_region",
+                                  counts={"A100": 2, "L4": 2})
+    grouping = (tuple(range(wf.n_tasks)),)
+    sizes = [topo.n]
+    plan = enum_mod.build_plan(topo, wf, grouping, sizes,
+                               list(range(topo.n)))
+    return topo, wf, grouping, sizes, plan
+
+
+def test_speculative_expected_tokens_bounds():
+    assert speculative_expected_tokens(4, 0.0) == 1.0
+    assert speculative_expected_tokens(4, 1.0) == 5.0
+    rates = [speculative_expected_tokens(4, a)
+             for a in (0.0, 0.3, 0.6, 0.9, 1.0)]
+    assert all(b > a for a, b in zip(rates, rates[1:]))
+    assert 1.0 < rates[1] < 5.0
+
+
+def test_gen_speculative_wave_pricing():
+    topo, wf, _, _, plan = _sched_setup()
+    cm = CostModel(topo, wf)
+    gen = [t for t in range(wf.n_tasks)
+           if wf.task(t).kind == TaskKind.GEN][0]
+    # k = 0 degenerates to the plain HBM decode bound
+    assert cm.gen_speculative_wave(plan, gen, spec_k=0) == \
+        pytest.approx(cm.c_hbm(plan, gen, 0, 0))
+    # a better draft (higher acceptance) can only get cheaper
+    costs = [cm.gen_speculative_wave(plan, gen, spec_k=4, accept_rate=a)
+             for a in (0.0, 0.5, 0.9)]
+    assert costs[0] > costs[1] > costs[2] > 0.0
+    # at zero acceptance speculation only adds draft work
+    assert costs[0] > cm.c_hbm(plan, gen, 0, 0)
+    # task_cost swaps in the speculative bound when the plan opts in
+    # (its hbm term is the one at the worst dp-replica / pp-stage)
+    base = cm.task_cost(plan, gen).hbm
+    plan.gen_spec[gen] = 4
+    spec_hbm = cm.task_cost(plan, gen).hbm
+    plan.gen_spec.pop(gen)
+    dp, pp, _ = plan.parallel[gen]
+    per_stage = [cm.gen_speculative_wave(plan, gen, i, j, spec_k=4)
+                 for i in range(dp) for j in range(pp)]
+    assert any(spec_hbm == pytest.approx(v) for v in per_stage)
+    assert spec_hbm != pytest.approx(base)
+
+
+def test_default_draft_spec_shrinks():
+    m = workflow.QWEN_1_7B
+    d = default_draft_spec(m)
+    assert d.n_layers == max(m.n_layers // 4, 1)
+    assert d.h1 < m.h1 and d.layer_weight_count < m.layer_weight_count
+    assert d.vocab == m.vocab
+
+
+def test_ea_decode_spec_best_response_deterministic():
+    """decode() picks the cost-model-cheapest draft-k per GEN task — a
+    deterministic best response, so re-decoding the same genome yields
+    the same gen_spec (the incumbent-stability invariant)."""
+    topo, wf, grouping, sizes, _ = _sched_setup()
+    es = EvolutionarySearch(topo, wf, grouping, sizes, seed=0)
+    ind = es._seeded_individual()
+    plan = es.decode(ind)
+    plan2 = es.decode(ind)
+    assert plan.gen_spec == plan2.gen_spec
+    for t in es._spec_tasks:
+        best = min((0, 2, 4, 8),
+                   key=lambda k: es.cm.gen_speculative_wave(plan, t, 0, 0,
+                                                            spec_k=k))
+        assert plan.gen_spec.get(t, 0) == best
