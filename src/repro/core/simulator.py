@@ -48,6 +48,12 @@ class Event:
     # obs.calibrate fits scale factors from.  None on simulated events.
     t_wall: Optional[float] = None
     span: Optional[int] = None
+    # device-folding collision flag (engine-measured events only): True
+    # when the task's plan group shared a real device with another group
+    # after folding — its replayed concurrency with other lanes is
+    # nominal, the host actually serialized them.  None on simulated
+    # events and on collision-free engine runs.
+    collision: Optional[bool] = None
 
 
 @dataclasses.dataclass

@@ -24,6 +24,7 @@ never straddle a swap.
 from __future__ import annotations
 
 import dataclasses
+import math
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
@@ -40,7 +41,7 @@ from repro.core.topology import Topology
 from repro.core.workflow import RLWorkflow, TaskKind
 from repro.engine import tasks as tasks_mod
 from repro.engine.pipeline import AsyncPipeline, sync_actor_weights
-from repro.engine.placement import build_placements
+from repro.engine.placement import build_placement, fold_plan
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 
@@ -93,19 +94,26 @@ class PlanContext:
     actor_train: int
     dev_free: Dict[int, float]            # plan-device availability (replay)
     start_iter: int = 0                   # first engine iteration in epoch
+    folding: Any = None                   # placement.DeviceFolding
+    multidev: bool = False                # placements span > 1 real device
 
 
 class Engine:
     def __init__(self, wf: RLWorkflow, plan: Plan, state,
                  *, topo: Optional[Topology] = None,
                  asynchronous: Optional[bool] = None,
-                 devices: Optional[Sequence] = None):
+                 devices: Optional[Sequence] = None,
+                 overlap: Optional[bool] = None):
         self.wf = wf
         self.state = state
         self._devices = list(devices) if devices is not None else None
         if asynchronous is None:
             asynchronous = not wf.synchronous
         self.pipeline = AsyncPipeline(asynchronous)
+        # gen/train wall-clock overlap: None = auto (on when async and
+        # the GEN group's folded devices are disjoint from every other
+        # task's), False = force the serialized stage walk
+        self._overlap_opt = overlap
         self.ctx = self._make_context(plan, topo, epoch=0, start_iter=0)
         self.ctx_history: List[PlanContext] = []   # retired epochs, oldest first
         # set when a topology drift could not be adopted because the
@@ -153,8 +161,11 @@ class Engine:
         missing = set(range(self.wf.n_tasks)) - set(plan.parallel)
         if missing:
             raise ValueError(f"plan does not cover workflow tasks {missing}")
-        placements = build_placements(plan, range(self.wf.n_tasks),
-                                      self._devices)
+        devices = list(self._devices) if self._devices is not None \
+            else jax.devices()
+        folding = fold_plan(plan, devices)
+        placements = {t: build_placement(plan, t, devices, folding)
+                      for t in range(self.wf.n_tasks)}
         gen_task = next(t for t in range(self.wf.n_tasks)
                         if self.wf.task(t).kind == TaskKind.GEN)
         actor_train = next(
@@ -163,8 +174,26 @@ class Engine:
             and self.wf.task(t).name.startswith("actor"))
         dev_free = {int(d): 0.0 for t in range(self.wf.n_tasks)
                     for d in plan.assignment[t].reshape(-1)}
+        multidev = len({id(d) for pl in placements.values()
+                        for d in pl.local_devices}) > 1
+        # commit each task's state onto its owning placement (no-op on
+        # single-device hosts; rebuilds on every elastic plan swap)
+        install = getattr(self.state, "install_placements", None)
+        if install is not None:
+            install(placements, self.wf)
+        # per-placement gauges: which device group / realized tp each
+        # task actually got, and whether folding collided at all
+        obs_metrics.gauge("placement.collisions").set(
+            float(folding.n_collisions))
+        for t, pl in placements.items():
+            name = self.wf.task(t).name
+            obs_metrics.gauge(f"placement.devices.{name}").set(
+                float(pl.n_devices))
+            obs_metrics.gauge(f"placement.tp_realized.{name}").set(
+                float(pl.tp_eff))
         return PlanContext(epoch, plan, topo, placements, gen_task,
-                           actor_train, dev_free, start_iter)
+                           actor_train, dev_free, start_iter,
+                           folding=folding, multidev=multidev)
 
     # back-compat accessors: the live context is authoritative
     @property
@@ -306,9 +335,14 @@ class Engine:
                 task = self.wf.task(t)
                 fn = tasks_mod.executor_for(task)
                 devs = [int(d) for d in self.plan.assignment[t].reshape(-1)]
+                pl = self.placements[t]
+                mesh_attr = "x".join(str(s) for s in pl.mesh_shape) + "@" \
+                    + ",".join(str(getattr(d, "id", d))
+                               for d in pl.local_devices)
                 with obs_trace.span(f"task.{task.name}", task=t,
                                     iteration=self._iter,
-                                    epoch=self.ctx.epoch) as sp:
+                                    epoch=self.ctx.epoch,
+                                    mesh=mesh_attr) as sp:
                     t0 = time.monotonic()
                     try:
                         retry_mod.retry_call(
@@ -378,10 +412,15 @@ class Engine:
                 self._dev_free[d] = end
             wall0, sid = (meta or {}).get(t, (None, 0))
             wall1 = wall0 + durations[t] if wall0 is not None else None
+            # honest overlap accounting: tag events of tasks whose plan
+            # group folded onto a device shared with another group
+            coll = True if self.placements[t].collision else None
             events.append(Event(start, "start", it, t, epoch=epoch,
-                                t_wall=wall0, span=sid or None))
+                                t_wall=wall0, span=sid or None,
+                                collision=coll))
             events.append(Event(end, "end", it, t, epoch=epoch,
-                                t_wall=wall1, span=sid or None))
+                                t_wall=wall1, span=sid or None,
+                                collision=coll))
             self._done_at[(it, t)] = end
         if trained:
             train_end = self._done_at[(it, self._actor_train)]
@@ -469,42 +508,73 @@ class Engine:
         self._observe_divergence(result)
         return result
 
+    def overlap_active(self) -> bool:
+        """Whether this epoch runs generation wall-clock concurrent with
+        the inference/training stages: asynchronous pipeline and the GEN
+        group's folded devices disjoint from every other task's (which a
+        collision-free group-aware folding guarantees for disjoint plan
+        groups).  With shared devices the serialized stage walk is the
+        honest execution — threads would only fake overlap."""
+        if self._overlap_opt is False or not self.pipeline.asynchronous:
+            return False
+        ctx = self.ctx
+        gen_devs = {id(d)
+                    for d in ctx.placements[ctx.gen_task].local_devices}
+        rest = {id(d) for t, pl in ctx.placements.items()
+                if t != ctx.gen_task for d in pl.local_devices}
+        return bool(rest) and not (gen_devs & rest)
+
     def _run_iteration(self, prompts, answers, rng) -> EngineResult:
         bb: Dict[str, Any] = {"lock": threading.Lock(), "metrics": {}}
         if self.fault_injector is not None:
             bb["fault"] = self.fault_injector
+        if self.ctx.multidev:
+            # executors must pull cross-mesh tensors to their own devices
+            bb["multidev"] = True
         bb.update(self.state.prepare_inputs(prompts, answers, rng))
         self._samples = int(bb["prompts_rep"].shape[0])
         durations: Dict[int, float] = {}
         meta: Dict[int, tuple] = {}
         before_stage = getattr(self.state, "before_stage", None)
-        for stage in self.wf.stages():
-            has_gen = any(self.wf.task(t).kind == TaskKind.GEN
-                          for t in stage)
-            if before_stage is not None:
-                # shared cross-task prep (e.g. advantages) runs outside
-                # the per-task timers so lane measurements stay honest
-                before_stage([self.wf.task(t) for t in stage], bb)
-            with obs_trace.span("engine.stage", tasks=len(stage)):
-                self._run_stage(stage, bb, durations, meta)
-            if has_gen:
-                self._record_gen_stats(bb)
-                bundle = self.pipeline.push(bb.pop("fresh"))
-                if bundle is None:
-                    # pipeline fill: nothing to train on yet, no sync
-                    events = self._replay_iteration(durations, 0.0,
-                                                    trained=False,
-                                                    meta=meta)
-                    return EngineResult(self.state.fill_metrics(), events,
-                                        self._iter - 1, self.ctx.epoch)
-                bb["bundle"] = bundle
-                self.pipeline.record(self._iter, bundle,
-                                     self.state.weight_version)
+        if self.overlap_active():
+            bundle = self._run_stages_overlapped(bb, durations, meta,
+                                                 before_stage)
+            if bundle is None:
+                events = self._replay_iteration(durations, 0.0,
+                                                trained=False, meta=meta)
+                return EngineResult(self.state.fill_metrics(), events,
+                                    self._iter - 1, self.ctx.epoch)
+        else:
+            for stage in self.wf.stages():
+                has_gen = any(self.wf.task(t).kind == TaskKind.GEN
+                              for t in stage)
+                if before_stage is not None:
+                    # shared cross-task prep (e.g. advantages) runs
+                    # outside the per-task timers so lane measurements
+                    # stay honest
+                    before_stage([self.wf.task(t) for t in stage], bb)
+                with obs_trace.span("engine.stage", tasks=len(stage)):
+                    self._run_stage(stage, bb, durations, meta)
+                if has_gen:
+                    self._record_gen_stats(bb)
+                    bundle = self.pipeline.push(bb.pop("fresh"))
+                    if bundle is None:
+                        # pipeline fill: nothing to train on yet, no sync
+                        events = self._replay_iteration(durations, 0.0,
+                                                        trained=False,
+                                                        meta=meta)
+                        return EngineResult(self.state.fill_metrics(),
+                                            events, self._iter - 1,
+                                            self.ctx.epoch)
+                    bb["bundle"] = bundle
+                    self.pipeline.record(self._iter, bundle,
+                                         self.state.weight_version)
 
         t0 = time.monotonic()
         with obs_trace.span("engine.sync", iteration=self._iter):
-            nbytes = sync_actor_weights(self.state,
-                                        self.placements[self._gen_task])
+            nbytes = sync_actor_weights(
+                self.state, self.placements[self._gen_task],
+                self.placements[self._actor_train])
             jax.block_until_ready(self.state.gen_params)
         sync_dur = time.monotonic() - t0
         self.sync_durations.append(sync_dur)
@@ -514,6 +584,58 @@ class Engine:
         events = self._replay_iteration(durations, sync_dur, trained=True,
                                         meta=meta)
         return EngineResult(metrics, events, self._iter - 1, self.ctx.epoch)
+
+    def _run_stages_overlapped(self, bb: Dict[str, Any],
+                               durations: Dict[int, float],
+                               meta: Dict[int, tuple],
+                               before_stage) -> Optional[Dict[str, Any]]:
+        """Disjoint-group execution: the GEN lane decodes iteration t+1's
+        rollouts on its own device group while the INF/TRAIN stages
+        consume iteration t's bundle on theirs — the async pipeline's
+        one-step staleness realized as wall-clock overlap, not just on
+        the replay timeline.  Returns the bundle trained on (None on the
+        pipeline-fill iteration).
+
+        Safe because overlap_active() guarantees disjoint device sets and
+        the weight sync at the end of the previous iteration gave the gen
+        group its own committed copy of the weights — the training lane
+        updating ``state.actor`` never touches what the gen lane reads."""
+        stages = self.wf.stages()
+        gen_tasks = [t for stage in stages for t in stage
+                     if self.wf.task(t).kind == TaskKind.GEN]
+        rest_stages = [[t for t in stage
+                        if self.wf.task(t).kind != TaskKind.GEN]
+                       for stage in stages]
+        # take the pending bundle *before* generation pushes a new one
+        bundle = self.pipeline.drain()
+
+        def gen_lane():
+            with obs_trace.span("engine.stage", tasks=len(gen_tasks),
+                                overlapped=True):
+                self._run_stage(gen_tasks, bb, durations, meta)
+
+        def train_lanes():
+            if bundle is None:
+                return
+            bb["bundle"] = bundle
+            self.pipeline.record(self._iter, bundle,
+                                 self.state.weight_version)
+            for stage in rest_stages:
+                if not stage:
+                    continue
+                if before_stage is not None:
+                    before_stage([self.wf.task(t) for t in stage], bb)
+                with obs_trace.span("engine.stage", tasks=len(stage),
+                                    overlapped=True):
+                    self._run_stage(stage, bb, durations, meta)
+
+        with ThreadPoolExecutor(max_workers=2) as pool:
+            futs = [pool.submit(gen_lane), pool.submit(train_lanes)]
+            for f in futs:
+                f.result()
+        self._record_gen_stats(bb)
+        self.pipeline.push(bb.pop("fresh"))
+        return bundle
 
     # -- reactive drift hook ---------------------------------------------
     def attach_divergence_monitor(self, monitor,
@@ -624,6 +746,13 @@ class Engine:
                "measured_decode_steps": float(self._wave_decode_steps),
                "predicted_occupancy": pred,
                "ratio": measured / max(pred, 1e-9)}
+        # honest overlap accounting: when folding collided, the lanes the
+        # replay timeline shows as concurrent actually serialized on a
+        # shared real device — flag it next to the occupancy figures
+        folding = self.ctx.folding
+        if folding is not None:
+            out["folding_collisions"] = float(folding.n_collisions)
+            out["overlap_honest"] = float(folding.n_collisions == 0)
         if self.topo is not None:
             cm = CostModel(self.topo, self.wf)
             out["predicted_occupancy_plan"] = \
@@ -668,25 +797,67 @@ class Engine:
         return SimResult(iter_time, makespan, self._samples / iter_time,
                          sorted(self.timeline, key=lambda e: e.time))
 
+    def realized_plan(self) -> Plan:
+        """The plan as the host actually executed it after folding: each
+        task's parallelization shrinks to its folded device count — tp to
+        ``gcd(tp, n)``, pp collapses to 1, dp takes the rest — and the
+        assignment keeps one representative plan id per real device, so
+        the cost model prices the submeshes that really ran.  Identical
+        to ``plan`` when the host has every planned device.  Layer/batch
+        splits are dropped (they describe the planned pp/dp)."""
+        parallel: Dict[int, tuple] = {}
+        assignment: Dict[int, np.ndarray] = {}
+        for t, pl in self.placements.items():
+            reps = list(pl.rep_plan_devices) or \
+                [int(self.plan.assignment[t].reshape(-1)[0])]
+            n = len(reps)
+            tp_eff = math.gcd(pl.tp, n)
+            parallel[t] = (n // tp_eff, 1, tp_eff)
+            assignment[t] = np.array(reps, dtype=int).reshape(
+                n // tp_eff, 1, tp_eff)
+        return dataclasses.replace(self.plan, parallel=parallel,
+                                   assignment=assignment,
+                                   layers_per_stage={}, batch_fraction={})
+
     def compare_with_simulator(self, cost_model: Optional[CostModel] = None,
                                n_iterations: Optional[int] = None
                                ) -> Dict[str, float]:
         """Fig-7 style: measured iteration time vs the cost model's
         event-driven prediction for the same (wf, plan) on `topo` —
-        plan-epoch aware, so both sides describe the *current* plan."""
+        plan-epoch aware, so both sides describe the *current* plan.
+
+        When gcd-folding shrank a task's parallelization (the host has
+        fewer devices than the plan assumed), the planned-plan prediction
+        prices submeshes that never ran; the ``*_realized`` keys re-price
+        against ``realized_plan()`` so the parity figure accounts for the
+        realized tp/dp."""
         if self.topo is None:
             raise ValueError("engine was built without a Topology")
         epoch_iters = self._iter - self.ctx.start_iter
+        n_it = n_iterations or max(epoch_iters, 4)
         sim = simulate(self.topo, self.wf, self.plan,
-                       n_iterations=n_iterations or max(epoch_iters, 4),
-                       cost_model=cost_model)
+                       n_iterations=n_it, cost_model=cost_model)
         meas = self.measured_result()
-        return {"measured_iter_s": meas.iteration_time,
-                "predicted_iter_s": sim.iteration_time,
-                "ratio": meas.iteration_time / sim.iteration_time,
-                "measured_makespan_s": meas.makespan,
-                "predicted_makespan_s": sim.makespan,
-                "epoch": float(self.ctx.epoch)}
+        out = {"measured_iter_s": meas.iteration_time,
+               "predicted_iter_s": sim.iteration_time,
+               "ratio": meas.iteration_time / sim.iteration_time,
+               "measured_makespan_s": meas.makespan,
+               "predicted_makespan_s": sim.makespan,
+               "epoch": float(self.ctx.epoch)}
+        rplan = self.realized_plan()
+        shrunk = any(rplan.parallel[t] != tuple(self.plan.parallel[t])
+                     for t in rplan.parallel)
+        out["tp_shrunk"] = float(shrunk)
+        if shrunk and rplan.fits_topology(self.topo):
+            rsim = simulate(self.topo, self.wf, rplan,
+                            n_iterations=n_it, cost_model=cost_model)
+            out["predicted_iter_realized_s"] = rsim.iteration_time
+            out["ratio_realized"] = \
+                meas.iteration_time / rsim.iteration_time
+        else:
+            out["predicted_iter_realized_s"] = sim.iteration_time
+            out["ratio_realized"] = out["ratio"]
+        return out
 
     def epoch_report(self, cost_model: Optional[CostModel] = None
                      ) -> List[Dict[str, float]]:

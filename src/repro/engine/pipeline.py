@@ -63,15 +63,26 @@ class AsyncPipeline:
         return self.asynchronous and self._pending is None
 
 
-def sync_actor_weights(st, gen_placement) -> float:
+def sync_actor_weights(st, gen_placement,
+                       train_placement=None) -> float:
     """Trained actor -> generation replica through the plan's reshard path.
 
-    Reshards onto the generation task's placement (identity when the
-    placement folds to the training devices); bumps the weight version the
-    pipeline uses to verify one-step staleness.  Returns bytes moved."""
+    Weight publication is an explicit ``device_put`` onto the generation
+    placement's shardings whenever the gen group is sharded *or* lives on
+    different real devices than the training group — the cross-group
+    reshard the cost model prices (``c_sync`` / the redeploy transition
+    term).  Identity handoff (zero copy) only when both tasks fold to the
+    same device set and no sharding is involved.  Bumps the weight
+    version the pipeline uses to verify one-step staleness.  Returns
+    bytes moved."""
     target = None
-    if gen_placement is not None and len(gen_placement.local_devices) > 1:
-        target = gen_placement.param_shardings(st.actor)
+    if gen_placement is not None:
+        same_devices = train_placement is not None and \
+            tuple(id(d) for d in gen_placement.local_devices) == \
+            tuple(id(d) for d in train_placement.local_devices)
+        if len(gen_placement.local_devices) > 1 or \
+                (train_placement is not None and not same_devices):
+            target = gen_placement.param_shardings(st.actor)
     st.gen_params, nbytes = sync_weights(st.actor, target)
     st.sync_bytes += nbytes
     st.weight_version += 1

@@ -112,8 +112,19 @@ def run_generation(st, bb, placement):
                 prefill_chunk=getattr(st.rl, "prefill_chunk", 0),
                 fast_path=False, slot_failures=slot_failures,
                 spec_k=spec_k, draft_params=draft_params,
-                draft_cfg=draft_cfg)
+                draft_cfg=draft_cfg,
+                mesh=placement.mesh if placement.sharded else None)
+        elif placement.sharded:
+            # single-wave decode jitted on the gen mesh: prompts split
+            # over data, params TP-sharded, hints active
+            prompts_d = placement.shard_batch(prompts)
+            ro = st.sharded_generate(placement, prompts_d)(
+                st.gen_params, prompts_d, bb["rng"])
+            stats = genserve.wave_stats_from_mask(ro["mask"])
         else:
+            if bb.get("multidev"):
+                prompts = jax.device_put(prompts,
+                                         placement.local_devices[0])
             ro = st._generate(st.gen_params, prompts=prompts,
                               rng=bb["rng"])
             # the single-wave path decodes all B rows at once — its wave
@@ -143,23 +154,41 @@ def run_reward(st, bb, placement):
 @register(TaskKind.INF, "reference_inference")
 def run_reference(st, bb, placement):
     b = bb["bundle"]
+    seqs = b["rollout"]["sequences"]
     with placement.mesh:
-        lp_ref = st._ref_logp(st.ref, b["rollout"]["sequences"],
-                              gen_start=b["gen_start"])
+        if placement.sharded:
+            seqs = placement.shard_batch(seqs)
+            lp_ref = st.sharded_ref_logp(placement, seqs)(
+                st.ref, seqs, int(b["gen_start"]))
+        else:
+            if bb.get("multidev"):
+                # rollout tensors live on the gen group's devices; pull
+                # them onto this task's device before the jitted call
+                seqs = jax.device_put(seqs, placement.local_devices[0])
+            lp_ref = st._ref_logp(st.ref, seqs, gen_start=b["gen_start"])
     with bb["lock"]:
-        bb["lp_ref"] = lp_ref
+        # host copy under multi-device: the advantage prep mixes tensors
+        # from several meshes, which eager ops refuse to colocate
+        bb["lp_ref"] = np.asarray(lp_ref) if bb.get("multidev") else lp_ref
     return lp_ref
 
 
 @register(TaskKind.INF, "critic_inference")
 def run_critic_inference(st, bb, placement):
     b = bb["bundle"]
+    seqs = b["rollout"]["sequences"]
     with placement.mesh:
-        values = st._critic_vals(st.critic, st.value_head,
-                                 b["rollout"]["sequences"],
-                                 gen_start=b["gen_start"])
+        if placement.sharded:
+            seqs = placement.shard_batch(seqs)
+            values = st.sharded_critic_vals(placement, seqs)(
+                st.critic, st.value_head, seqs, int(b["gen_start"]))
+        else:
+            if bb.get("multidev"):
+                seqs = jax.device_put(seqs, placement.local_devices[0])
+            values = st._critic_vals(st.critic, st.value_head, seqs,
+                                     gen_start=b["gen_start"])
     with bb["lock"]:
-        bb["values"] = values
+        bb["values"] = np.asarray(values) if bb.get("multidev") else values
     return values
 
 
@@ -178,9 +207,20 @@ def ensure_train_batch(st, bb):
         rl = st.rl
         b = bb["bundle"]
         ro = b["rollout"]
-        mask = ro["mask"]
+        # under multi-device execution the rollout, reference and critic
+        # tensors are committed to different meshes; eager ops refuse to
+        # mix them, so the (tiny) advantage prep runs from host copies —
+        # the training executors re-commit the batch onto their meshes
+        multidev = bool(bb.get("multidev"))
+        # round-trip through host memory drops the device commitment
+        # while keeping jnp semantics downstream
+        pull = (lambda x: jnp.asarray(np.asarray(x))) if multidev \
+            else (lambda x: x)
+        mask = pull(ro["mask"])
+        lp_old = pull(ro["logprobs"])
+        lp_ref = pull(bb["lp_ref"])
         tok_rewards, kl = losses.kl_penalised_rewards(
-            jnp.asarray(bb["scores"]), ro["logprobs"], bb["lp_ref"], mask,
+            jnp.asarray(bb["scores"]), lp_old, lp_ref, mask,
             kl_beta=rl.kl_beta)
         bb["metrics"].update({
             "reward_mean": float(bb["scores"].mean()),
@@ -188,7 +228,7 @@ def ensure_train_batch(st, bb):
             "gen_len": float(np.asarray(mask).sum(1).mean()),
         })
         if rl.algorithm == "ppo":
-            values = bb["values"]
+            values = pull(bb["values"])
             adv, returns = gae.gae_advantages(
                 tok_rewards, values * mask, mask,
                 gamma=rl.gamma, lam=rl.lam)
@@ -199,8 +239,8 @@ def ensure_train_batch(st, bb):
                                       rl.n_rollouts, mask)
         if rl.whiten_advantages:
             adv = gae.whiten(adv, mask)
-        bb["batch"] = {"sequences": ro["sequences"],
-                       "logp_old": ro["logprobs"],
+        bb["batch"] = {"sequences": pull(ro["sequences"]),
+                       "logp_old": lp_old,
                        "advantages": adv, "mask": mask}
 
 
@@ -209,8 +249,17 @@ def run_actor_training(st, bb, placement):
     ensure_train_batch(st, bb)
     b = bb["bundle"]
     with placement.mesh:
-        st.actor, st.actor_opt, am = st._actor_step(
-            st.actor, st.actor_opt, bb["batch"], gen_start=b["gen_start"])
+        if placement.sharded:
+            batch = placement.shard_batch(bb["batch"])
+            st.actor, st.actor_opt, am = st.sharded_actor_step(
+                placement, batch)(st.actor, st.actor_opt, batch,
+                                  int(b["gen_start"]))
+        else:
+            batch = bb["batch"]
+            if bb.get("multidev"):
+                batch = jax.device_put(batch, placement.local_devices[0])
+            st.actor, st.actor_opt, am = st._actor_step(
+                st.actor, st.actor_opt, batch, gen_start=b["gen_start"])
     with bb["lock"]:
         bb["metrics"].update({k: float(v) for k, v in am.items()})
     return st.actor
@@ -221,12 +270,26 @@ def run_critic_training(st, bb, placement):
     ensure_train_batch(st, bb)
     b = bb["bundle"]
     mask = bb["batch"]["mask"]
-    cbatch = dict(bb["batch"], values_old=bb["values"] * mask,
+    values = bb["values"]
+    if bb.get("multidev"):
+        values = np.asarray(values)
+    cbatch = dict(bb["batch"], values_old=values * mask,
                   returns=bb["returns"])
     with placement.mesh:
-        (st.critic, st.value_head), st.critic_opt, closs = \
-            st._critic_step((st.critic, st.value_head), st.critic_opt,
-                            cbatch, gen_start=b["gen_start"])
+        if placement.sharded:
+            cbatch = placement.shard_batch(cbatch)
+            (st.critic, st.value_head), st.critic_opt, closs = \
+                st.sharded_critic_step(placement, cbatch)(
+                    (st.critic, st.value_head), st.critic_opt, cbatch,
+                    int(b["gen_start"]))
+        else:
+            if bb.get("multidev"):
+                cbatch = jax.device_put(cbatch,
+                                        placement.local_devices[0])
+            (st.critic, st.value_head), st.critic_opt, closs = \
+                st._critic_step((st.critic, st.value_head),
+                                st.critic_opt, cbatch,
+                                gen_start=b["gen_start"])
     with bb["lock"]:
         bb["metrics"]["critic_loss"] = float(closs)
     return closs

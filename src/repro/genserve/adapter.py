@@ -73,7 +73,8 @@ def generate(params, cfg: ModelConfig, prompts, rng,
              slot_failures: Optional[Dict[int, Sequence[int]]] = None,
              cancels: Optional[Dict[int, Sequence[int]]] = None,
              spec_k: int = 0, draft_params=None,
-             draft_cfg: Optional[ModelConfig] = None
+             draft_cfg: Optional[ModelConfig] = None,
+             mesh=None
              ) -> Tuple[Dict[str, jnp.ndarray], Dict[str, object]]:
     """Continuous-batching generation with the rollout contract.
 
@@ -96,10 +97,14 @@ def generate(params, cfg: ModelConfig, prompts, rng,
     ``spec_k > 0`` turns on draft-model speculative decoding (requires
     ``draft_params`` + ``draft_cfg``) — always the engine path: the
     draft/verify sub-round is a wave-step program.
+    ``mesh`` routes through the mesh-aware serve entry (sharded decode
+    on the generation group's devices) and disables the fast path —
+    the caller shards the single-wave path itself.
     """
     B = int(np.asarray(prompts).shape[0])
     W = int(wave) if wave else plan_mod.decode_wave(B)
-    if fast_path and gen_lens is None and prefill_chunk == 0 \
+    if fast_path and mesh is None and gen_lens is None \
+            and prefill_chunk == 0 \
             and page_size == 0 and B <= W and spec_k == 0 \
             and not slot_failures and not cancels:
         ro = rollout.generate(params, cfg, jnp.asarray(prompts), rng,
@@ -117,4 +122,4 @@ def generate(params, cfg: ModelConfig, prompts, rng,
     return serve(params, cfg, prompts, rng, gcfg, gen_lens=gen_lens,
                  prompt_lens=prompt_lens, slot_failures=slot_failures,
                  cancels=cancels, draft_params=draft_params,
-                 draft_cfg=draft_cfg)
+                 draft_cfg=draft_cfg, mesh=mesh)

@@ -261,11 +261,15 @@ def _wave_decode_vmapped(params, cfg: ModelConfig, tok, pos, blocks):
 @functools.lru_cache(maxsize=64)
 def _build_fns(cfg: ModelConfig, gcfg: GenServeConfig, prompt_len: int,
                n_reqs: int, impl: str = "jnp",
-               draft_cfg: Optional[ModelConfig] = None):
+               draft_cfg: Optional[ModelConfig] = None,
+               mesh=None):
     # `impl` (the active models.attention implementation) is part of the
     # cache key only: tracing reads the global impl at first call, so a
     # cached jitted fn built under "jnp" must not be reused under
-    # "pallas" (or vice versa).
+    # "pallas" (or vice versa).  `mesh` likewise: the jitted programs
+    # bake in the sharding constraints (``parallel.sharding`` hints)
+    # active when first traced, so a fn traced for one mesh — or none —
+    # must not serve another.
     N = gcfg.max_new_tokens
     eos = gcfg.eos_token
     dummy_row = n_reqs               # output buffers carry a scratch row
@@ -756,7 +760,8 @@ def serve(params, cfg: ModelConfig, prompts, rng, gcfg: GenServeConfig,
           prompt_lens: Optional[Sequence[int]] = None,
           slot_failures: Optional[Dict[int, Sequence[int]]] = None,
           cancels: Optional[Dict[int, Sequence[int]]] = None,
-          draft_params=None, draft_cfg: Optional[ModelConfig] = None
+          draft_params=None, draft_cfg: Optional[ModelConfig] = None,
+          mesh=None, _in_mesh: bool = False
           ) -> Tuple[Dict[str, jnp.ndarray], Dict[str, object]]:
     """Generate for all `prompts` [B, P] with continuous batching.
 
@@ -782,8 +787,31 @@ def serve(params, cfg: ModelConfig, prompts, rng, gcfg: GenServeConfig,
       it completes like any other request.
     * ``cancels``: round -> request ids to retire explicitly (no EOS,
       no budget exhaustion): dequeued if pending, evicted + zeroed if
-      in-flight; their output rows are all-zero with an all-zero mask."""
+      in-flight; their output rows are all-zero with an all-zero mask.
+
+    ``mesh`` makes the serve loop mesh-aware: params (and draft params)
+    are committed onto the mesh's TP/FSDP shardings and every engine
+    program is traced under the mesh with ``parallel.sharding``
+    activation hints active, so continuous-batching decode runs sharded
+    over the generation group's devices.  The mesh joins the jit-program
+    cache key (constraints are baked in at trace time)."""
     gcfg.validate()
+    if mesh is not None and not _in_mesh and mesh.devices.size > 1:
+        from repro.parallel import sharding as sh_mod
+        params = jax.device_put(params, sh_mod.named_shardings(
+            mesh, sh_mod.param_tree_specs(params), params))
+        if draft_params is not None:
+            draft_params = jax.device_put(draft_params, sh_mod.named_shardings(
+                mesh, sh_mod.param_tree_specs(draft_params), draft_params))
+        rules = sh_mod.default_activation_rules(seq_shard=False)
+        with mesh, sh_mod.use_hints(rules):
+            return serve(params, cfg, prompts, rng, gcfg,
+                         gen_lens=gen_lens, prompt_lens=prompt_lens,
+                         slot_failures=slot_failures, cancels=cancels,
+                         draft_params=draft_params, draft_cfg=draft_cfg,
+                         mesh=mesh, _in_mesh=True)
+    if mesh is not None and mesh.devices.size <= 1:
+        mesh = None
     spec = gcfg.spec_k > 0
     if spec:
         assert draft_params is not None and draft_cfg is not None, \
@@ -838,7 +866,7 @@ def serve(params, cfg: ModelConfig, prompts, rng, gcfg: GenServeConfig,
     fns_cfg = dataclasses.replace(gcfg, measure_ttft=False)
     admit_fn, chunk_fn, install_fn, mixed_fn, copy_fn = _build_fns(
         cfg, fns_cfg, P, B, attn_mod.get_attention_impl(),
-        draft_cfg if spec else None)
+        draft_cfg if spec else None, mesh)
     state = _init_state(cfg, fns_cfg, P, B, draft_cfg if spec else None)
     spec_tokens = spec_proposed = spec_accepted = 0
 

@@ -3,14 +3,38 @@
 Two pieces:
 
 1. ``hint(x, name)`` — models call this on named intermediate activations
-   (residual stream, mamba inner, moe buffer, logits...).  Outside any mesh
-   context it is the identity, so all models run unchanged on a single CPU
-   device.  Inside ``use_hints(rules)`` each named activation gets a
-   ``with_sharding_constraint`` — this is where the distribution schedule
-   (and the §Perf iterations) plug in without touching model code.
+   (residual stream, mamba inner, moe buffer, logits...).  Outside
+   ``use_hints`` it is the identity, so all models run unchanged on a
+   single CPU device.  Inside ``use_hints(rules)`` each named activation
+   gets a ``with_sharding_constraint`` — this is where the distribution
+   schedule (and the §Perf iterations) plug in without touching model
+   code.
 
-2. ``param_specs(cfg, rules)`` — maps a parameter pytree to PartitionSpecs
-   by parameter-name pattern (TP over ``model``, FSDP over ``data``).
+2. ``param_tree_specs(params)`` — maps a parameter pytree to
+   PartitionSpecs by parameter-name pattern (TP over ``model``, FSDP over
+   ``data``); ``named_shardings`` turns them into per-mesh
+   ``NamedSharding``s, sanitized so non-dividing axes replicate.
+
+Plan → mesh → sharding flow (how the engine uses this module):
+
+- the scheduler's ``Plan`` assigns each task (dp, pp, tp) and plan
+  device ids; ``engine.placement.build_placements`` folds those onto the
+  host's real devices (group-aware: disjoint plan groups get disjoint
+  real device sets when the host is large enough) and builds one
+  ``Mesh(("data", "model"))`` per task with ``model = gcd(tp, n)``.
+- ``TaskPlacement.param_shardings`` runs ``param_tree_specs`` →
+  ``named_shardings`` on that mesh; ``rl.trainer`` commits each task's
+  state (params + optimizer moments) onto its owner's shardings with
+  ``device_put`` and jits the step functions with explicit
+  in/out_shardings (jit refuses mismatched committed arrays, so the
+  device_put is load-bearing, not an optimization).
+- batches are committed with ``TaskPlacement.shard_batch`` (leading dim
+  over ``data``); step bodies trace inside ``use_hints(rules)`` under
+  ``with mesh:`` so ``hint`` constraints resolve (a bare
+  ``PartitionSpec`` constraint needs an ambient mesh at trace time).
+- train → gen weight publication is an explicit ``device_put`` onto the
+  gen placement's shardings (``rl.pipeline.sync_actor_weights``), priced
+  by the cost model's sync term.
 """
 from __future__ import annotations
 
@@ -22,6 +46,14 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+
+# Sharding-invariant PRNG: partitionable threefry makes random bits a
+# pure function of (key, position) regardless of how an array is
+# partitioned, so a sharded decode samples exactly the stream the
+# single-device reference samples (cross-mesh token parity).  Set once
+# at import — flipping it mid-process would fork the PRNG stream
+# between already-initialized and later-initialized state.
+jax.config.update("jax_threefry_partitionable", True)
 
 _local = threading.local()
 

@@ -30,6 +30,7 @@ from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.obs import trace as obs_trace
 from repro.optim import adam
+from repro.parallel import sharding as sh
 from repro.rl import gae, losses, rewards as rewards_mod, rollout
 
 
@@ -45,6 +46,9 @@ class RLConfig:
     n_rollouts: int = 4              # responses per prompt (GRPO group)
     max_new_tokens: int = 8
     temperature: float = 1.0
+    # greedy decode: deterministic argmax sampling — what sharded-vs-
+    # unsharded parity checks pin token-identical generation on
+    greedy: bool = False
     whiten_advantages: bool = True
     lr: float = 1e-4
     # asynchronous (one-step off-policy) RL: generation for iteration t+1
@@ -80,7 +84,8 @@ def default_plan(wf: workflow.RLWorkflow, n_devices: Optional[int] = None):
 
 class RLTrainer:
     def __init__(self, model_cfg: ModelConfig, rl_cfg: RLConfig,
-                 task: AdditionTask, key, plan=None, topo=None, wf=None):
+                 task: AdditionTask, key, plan=None, topo=None, wf=None,
+                 devices=None, overlap=None):
         self.cfg = model_cfg
         self.rl = rl_cfg
         self.task = task
@@ -100,7 +105,9 @@ class RLTrainer:
                 adam.AdamConfig(lr=rl_cfg.lr))
         self.sampler = rollout.SamplerConfig(
             max_new_tokens=rl_cfg.max_new_tokens,
-            temperature=rl_cfg.temperature, eos_token=EOS)
+            temperature=rl_cfg.temperature, eos_token=EOS,
+            greedy=rl_cfg.greedy)
+        self._shard_cache: Dict[Tuple, Callable] = {}
         self._jit()
 
         # plan-driven engine: the plan decides task colocation/concurrency
@@ -127,8 +134,13 @@ class RLTrainer:
         if plan is None:
             host_topo, plan = default_plan(self.wf)
             topo = topo if topo is not None else host_topo
+        # ``devices`` restricts the engine to a subset of the host's jax
+        # devices (e.g. an unsharded single-device baseline next to a
+        # sharded run); ``overlap`` forwards the gen/train wall-clock
+        # overlap switch (None = auto on disjoint folded groups).
         self.engine = Engine(self.wf, plan, self, topo=topo,
-                             asynchronous=rl_cfg.asynchronous)
+                             asynchronous=rl_cfg.asynchronous,
+                             devices=devices, overlap=overlap)
 
     @property
     def plan(self):
@@ -169,14 +181,15 @@ class RLTrainer:
     def _jit(self):
         cfg, rl = self.cfg, self.rl
 
-        self._generate = jax.jit(functools.partial(
-            rollout.generate, cfg=cfg, sampler=self.sampler),
-            static_argnames=())
+        self._generate_raw = functools.partial(
+            rollout.generate, cfg=cfg, sampler=self.sampler)
+        self._generate = jax.jit(self._generate_raw, static_argnames=())
 
         def ref_logp(params, sequences, gen_start):
             lp, _ = rollout.sequence_logprobs(params, cfg, sequences,
                                               gen_start)
             return lp
+        self._ref_logp_raw = ref_logp
         self._ref_logp = jax.jit(ref_logp, static_argnames=("gen_start",))
 
         def actor_loss(params, batch, gen_start):
@@ -198,6 +211,7 @@ class RLTrainer:
             new_params, new_opt, om = adam.adam_update(
                 params, grads, opt_state, adam.AdamConfig(lr=rl.lr))
             return new_params, new_opt, {**pl, "loss": loss, **om}
+        self._actor_step_raw = actor_step
         self._actor_step = jax.jit(actor_step,
                                    static_argnames=("gen_start",))
 
@@ -205,6 +219,7 @@ class RLTrainer:
             def critic_vals(critic, head, sequences, gen_start):
                 return rewards_mod.critic_values(critic, head, cfg,
                                                  sequences, gen_start)
+            self._critic_vals_raw = critic_vals
             self._critic_vals = jax.jit(critic_vals,
                                         static_argnames=("gen_start",))
 
@@ -222,8 +237,154 @@ class RLTrainer:
                 new_cp, new_opt, _ = adam.adam_update(
                     cp, grads, opt_state, adam.AdamConfig(lr=rl.lr))
                 return new_cp, new_opt, loss
+            self._critic_step_raw = critic_step
             self._critic_step = jax.jit(critic_step,
                                         static_argnames=("gen_start",))
+
+    # -- sharded execution (plan → mesh → shardings) --------------------
+    #
+    # When a task's placement spans more than one real device, its state
+    # is committed onto the placement mesh (``install_placements``) and
+    # the step runs through a per-mesh jit with explicit in/out
+    # shardings + ``use_hints`` activation rules.  jit refuses committed
+    # arrays whose sharding mismatches ``in_shardings``, so callers go
+    # through ``TaskPlacement.shard_batch`` for inputs; single-device
+    # placements keep the original jitted paths untouched.
+
+    def _opt_shardings(self, placement, pshard):
+        return {"step": placement.replicated_sharding(),
+                "m": pshard, "v": pshard}
+
+    def _sharded(self, name: str, placement, build: Callable) -> Callable:
+        key = (name, placement.mesh)
+        fn = self._shard_cache.get(key)
+        if fn is None:
+            fn = self._shard_cache[key] = build()
+        return fn
+
+    def install_placements(self, placements, wf) -> None:
+        """Commit each task's state onto its owning placement.
+
+        Called by the engine whenever placements (re)build — initial
+        construction and every elastic plan swap.  Ownership: actor +
+        optimizer → actor_training; reference → reference_inference;
+        generation replica → actor_generation; critic state →
+        critic_training.  Single-host single-device runs are left
+        untouched (everything already lives on the only device)."""
+        self._shard_cache.clear()
+        multi = len({id(d) for pl in placements.values()
+                     for d in pl.local_devices}) > 1
+        by_name = {wf.tasks[t].name: pl for t, pl in placements.items()}
+
+        tp = by_name.get("actor_training")
+        if tp is not None and (tp.sharded or multi):
+            ps = tp.param_shardings(self.actor)
+            self.actor = jax.device_put(self.actor, ps)
+            self.actor_opt = jax.device_put(
+                self.actor_opt, self._opt_shardings(tp, ps))
+        rp = by_name.get("reference_inference")
+        if rp is not None and (rp.sharded or multi):
+            self.ref = jax.device_put(self.ref,
+                                      rp.param_shardings(self.ref))
+        gp = by_name.get("actor_generation")
+        if gp is not None and (gp.sharded or multi):
+            self.gen_params = jax.device_put(
+                self.gen_params, gp.param_shardings(self.gen_params))
+        if self.rl.algorithm == "ppo":
+            cp = by_name.get("critic_training") \
+                or by_name.get("critic_inference")
+            if cp is not None and (cp.sharded or multi):
+                cps = (cp.param_shardings(self.critic),
+                       cp.param_shardings(self.value_head))
+                self.critic, self.value_head = jax.device_put(
+                    (self.critic, self.value_head), cps)
+                self.critic_opt = jax.device_put(
+                    self.critic_opt, self._opt_shardings(cp, cps))
+
+    def sharded_actor_step(self, placement, batch) -> Callable:
+        """(params, opt, batch, gen_start) jitted on the placement mesh;
+        gen_start positional-static (jit forbids kwargs with
+        in_shardings)."""
+        def build():
+            rules = placement.activation_rules()
+            ps = placement.param_shardings(self.actor)
+            repl = placement.replicated_sharding()
+            os_ = self._opt_shardings(placement, ps)
+            bs = placement.batch_shardings(batch)
+            raw = self._actor_step_raw
+
+            def step(params, opt_state, batch, gen_start):
+                with sh.use_hints(rules):
+                    return raw(params, opt_state, batch, gen_start)
+            return jax.jit(step, static_argnums=(3,),
+                           in_shardings=(ps, os_, bs),
+                           out_shardings=(ps, os_, repl))
+        return self._sharded("actor_step", placement, build)
+
+    def sharded_ref_logp(self, placement, sequences) -> Callable:
+        def build():
+            rules = placement.activation_rules()
+            ps = placement.param_shardings(self.ref)
+            repl = placement.replicated_sharding()
+            bs = placement.batch_shardings(sequences)
+            raw = self._ref_logp_raw
+
+            def step(params, sequences, gen_start):
+                with sh.use_hints(rules):
+                    return raw(params, sequences, gen_start)
+            return jax.jit(step, static_argnums=(2,),
+                           in_shardings=(ps, bs), out_shardings=repl)
+        return self._sharded("ref_logp", placement, build)
+
+    def sharded_generate(self, placement, prompts) -> Callable:
+        """(params, prompts, rng) single-wave decode on the gen mesh."""
+        def build():
+            rules = placement.activation_rules()
+            ps = placement.param_shardings(self.gen_params)
+            repl = placement.replicated_sharding()
+            bs = placement.batch_shardings(prompts)
+            raw = self._generate_raw
+
+            def step(params, prompts, rng):
+                with sh.use_hints(rules):
+                    return raw(params, prompts=prompts, rng=rng)
+            return jax.jit(step, in_shardings=(ps, bs, repl),
+                           out_shardings=repl)
+        return self._sharded("generate", placement, build)
+
+    def sharded_critic_vals(self, placement, sequences) -> Callable:
+        def build():
+            rules = placement.activation_rules()
+            cps = (placement.param_shardings(self.critic),
+                   placement.param_shardings(self.value_head))
+            repl = placement.replicated_sharding()
+            bs = placement.batch_shardings(sequences)
+            raw = self._critic_vals_raw
+
+            def step(critic, head, sequences, gen_start):
+                with sh.use_hints(rules):
+                    return raw(critic, head, sequences, gen_start)
+            return jax.jit(step, static_argnums=(3,),
+                           in_shardings=(*cps, bs), out_shardings=repl)
+        return self._sharded("critic_vals", placement, build)
+
+    def sharded_critic_step(self, placement, batch) -> Callable:
+        def build():
+            rules = placement.activation_rules()
+            cps = (placement.param_shardings(self.critic),
+                   placement.param_shardings(self.value_head))
+            repl = placement.replicated_sharding()
+            os_ = self._opt_shardings(placement, cps)
+            bs = placement.batch_shardings(batch)
+            raw = self._critic_step_raw
+
+            def step(cp, opt_state, batch, gen_start):
+                with sh.use_hints(rules):
+                    return raw(cp, opt_state, batch, gen_start)
+            return jax.jit(step, static_argnums=(3,),
+                           in_shardings=(cps, os_, bs),
+                           out_shardings=(cps, os_, repl))
+        return self._sharded("critic_step", placement, build)
 
     # -- engine hooks ---------------------------------------------------
     def prepare_inputs(self, prompts: np.ndarray, answers: np.ndarray,

@@ -120,6 +120,9 @@ def test_prompt_ending_in_eos_starts_dead(setup):
     on both the reference path and genserve."""
     cfg, params = setup
     prompts = np.array(prompts_for(4))
+    # pin the alive/dead split instead of trusting the random prompts:
+    # rows 0/2 must not end in EOS by luck of the PRNG stream
+    prompts[0, -1] = prompts[2, -1] = 0
     prompts[1, -1] = EOS
     prompts[3, -1] = EOS
     sampler = rollout.SamplerConfig(max_new_tokens=N, eos_token=EOS)
